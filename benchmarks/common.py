@@ -1,0 +1,102 @@
+"""Shared benchmark substrate: one trained bench model + cached PTQ runs.
+
+The bench model plays ResNet-18's role at CPU-benchmark scale: big enough
+that 2-bit RTN visibly collapses, small enough to calibrate in minutes.
+Everything is cached under artifacts/bench/ so tables compose.
+"""
+from __future__ import annotations
+
+import json
+import pickle
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ReconConfig, quantize
+from repro.core.evaluate import evaluate
+from repro.data import Corpus, CorpusConfig, make_batches
+from repro.models import get_model
+from repro.optim import adam
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+ART.mkdir(parents=True, exist_ok=True)
+
+BENCH_ARCH = "brecq_lm_100m"
+TRAIN_STEPS = 400
+BATCH, SEQ = 16, 96
+N_CALIB = 64  # sequences (paper: 1024 images; scaled to CPU budget)
+RECON_ITERS = 80  # paper: 20k/block; scaled to the CPU budget
+
+
+def bench_config():
+    import dataclasses
+
+    from repro.models import get_config
+
+    cfg = get_config(BENCH_ARCH, reduced=False)
+    # CPU-bench scale of the same family (full 100M is for examples/)
+    return dataclasses.replace(cfg, n_layers=6, d_model=256, n_heads=8,
+                               n_kv_heads=8, d_ff=704, vocab=2048)
+
+
+def get_bench_model(train_steps: int = TRAIN_STEPS):
+    """(cfg, model, params, calib_batches, eval_batches); cached on disk."""
+    from repro.models import build_model
+
+    cfg = bench_config()
+    model = build_model(cfg)
+    corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
+    cache = ART / "bench_params.pkl"
+    if cache.exists():
+        with open(cache, "rb") as f:
+            params = jax.tree.map(jnp.asarray, pickle.load(f))
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+        acfg = adam.AdamConfig(lr=3e-3, grad_clip=1.0)
+        state = adam.init(params)
+
+        @jax.jit
+        def step(params, state, batch):
+            loss, g = jax.value_and_grad(
+                lambda p: model.loss(p, batch, remat="none"))(params)
+            return (*adam.update(acfg, g, state, params), loss)
+
+        t0 = time.time()
+        for i in range(train_steps):
+            batch = make_batches(corpus, 1, BATCH, SEQ, seed=0, start_step=i)[0]
+            params, state, loss = step(params, state, batch)
+            if i % 100 == 0:
+                print(f"[bench-train] step {i} loss {float(loss):.3f}")
+        print(f"[bench-train] {train_steps} steps in {time.time()-t0:.0f}s, "
+              f"final loss {float(loss):.3f}")
+        with open(cache, "wb") as f:
+            pickle.dump(jax.device_get(params), f)
+    calib = make_batches(corpus, N_CALIB // 8, 8, SEQ, seed=1, start_step=10_000)
+    evalb = make_batches(corpus, 4, 16, SEQ, seed=2, start_step=20_000)
+    return cfg, model, params, calib, evalb
+
+
+def cached_brecq(model, params, calib, rc: ReconConfig, tag: str):
+    """BRECQ result cache keyed by tag (fig2 reuses table runs)."""
+    f = ART / f"brecq_{tag}.pkl"
+    if f.exists():
+        with open(f, "rb") as fh:
+            return pickle.load(fh)
+    t0 = time.time()
+    res = quantize(model, params, calib, rc)
+    res.stats["calib_wall_s"] = time.time() - t0
+    with open(f, "wb") as fh:
+        pickle.dump(jax.device_get(
+            {"params_q": res.params_q, "act_scales": res.act_scales,
+             "v": res.v, "qstates": res.qstates, "stats": res.stats}), fh)
+    with open(f, "rb") as fh:
+        return pickle.load(fh)
+
+
+def emit(rows: list[dict], table: str):
+    """Print the scaffold CSV (name,us_per_call,derived) + save JSON."""
+    for r in rows:
+        print(f"{table}/{r['name']},{r.get('us_per_call', 0):.0f},{r['derived']}")
+    (ART / f"{table}.json").write_text(json.dumps(rows, indent=1, default=float))

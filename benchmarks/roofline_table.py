@@ -1,0 +1,67 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (written by launch/dryrun.py) and emits the
+per-(arch x shape x mesh) three-term table with bottleneck + notes.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+FIX_HINTS = {
+    "compute": "increase arithmetic intensity (fuse, larger per-chip batch)",
+    "memory": "cut HBM traffic: quantized weights/KV, better remat policy",
+    "collective": "reshard: fewer TP psums / EP all-to-alls, overlap with compute",
+}
+
+
+def load_rows():
+    rows = []
+    for f in sorted(ART.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("tag"):
+            continue  # variants are reported in §Perf, not the baseline table
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "strategy": d["strategy"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "bottleneck": r["bottleneck"],
+            "model_flops": r["model_flops_per_chip"],
+            "hlo_flops": r["hlo_flops_per_chip"],
+            "useful_ratio": r["useful_ratio"],
+            "roofline_frac": r["roofline_frac"],
+            "fits_16gb": d.get("fits_16gb"),
+            "per_chip_gb": d.get("per_chip_bytes_tpu_corrected",
+                                 d.get("per_chip_bytes", 0)) / 1e9,
+            "fix": FIX_HINTS[r["bottleneck"]],
+        })
+    return rows
+
+
+def main() -> list[dict]:
+    rows = load_rows()
+    if not rows:
+        print("roofline/none,0,run `python -m repro.launch.dryrun --all` first")
+        return []
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} {'strat':6s} "
+           f"{'compute':>9s} {'memory':>9s} {'collect':>9s} {'bound':>10s} "
+           f"{'useful':>7s} {'frac':>6s} {'GB/chip':>8s} fit")
+    print(hdr)
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} {r['strategy']:6s} "
+              f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+              f"{r['bottleneck']:>10s} {r['useful_ratio']:7.3f} "
+              f"{r['roofline_frac']:6.3f} {r['per_chip_gb']:8.1f} "
+              f"{'Y' if r['fits_16gb'] else 'N'}")
+    for r in rows:
+        print(f"roofline/{r['arch']}_{r['shape']}_{r['mesh']},"
+              f"{max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6:.0f},"
+              f"bound={r['bottleneck']};frac={r['roofline_frac']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

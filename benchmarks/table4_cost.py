@@ -1,0 +1,105 @@
+"""Paper Table 4: PTQ-vs-QAT cost/accuracy trade.
+
+BRECQ calibrates with N_CALIB sequences in seconds-to-minutes; a
+straight-through-estimator QAT run needs the full training stream and
+many steps to match. We report wall time, data budget and final loss for
+both at W4 (the paper's 240x production-speed claim, at bench scale).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ReconConfig
+from repro.core.evaluate import evaluate
+from repro.core.hooks import RTNHook
+from repro.core.quantizer import QConfig, fake_quant_ste, init_qstate
+from repro.core.reconstruction import Walker, enumerate_weights, init_states
+from repro.data import Corpus, CorpusConfig, make_batches
+from repro.optim import adam
+
+from .common import (BATCH, RECON_ITERS, SEQ, cached_brecq, emit,
+                     get_bench_model)
+
+QAT_STEPS = 150
+W_BITS = 4
+
+
+def qat_ste(model, params, cfg, steps=QAT_STEPS, lr=5e-4):
+    """STE fake-quant QAT baseline (PACT/DSQ-class), trained on the full
+    data stream."""
+    corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
+    rc = ReconConfig(w_bits=W_BITS)
+    weights = enumerate_weights(
+        model, params, make_batches(corpus, 1, 1, 8, seed=9)[0])
+    qstates, embed_head = init_states(model, weights, rc)
+    walker = Walker(model)
+
+    class QATHook(RTNHook):
+        def weight(self, path, w):
+            if path in qstates:
+                return fake_quant_ste(w, *qstates[path])
+            if path in embed_head:
+                return fake_quant_ste(w, *embed_head[path])
+            return w
+
+    hook = QATHook({})
+    acfg = adam.AdamConfig(lr=lr, grad_clip=1.0)
+    state = adam.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: walker.loss(p, batch, hook))(params)
+        return (*adam.update(acfg, g, state, params), loss)
+
+    t0 = time.time()
+    tokens_seen = 0
+    for i in range(steps):
+        batch = make_batches(corpus, 1, BATCH, SEQ, seed=3, start_step=i)[0]
+        params, state, loss = step(params, state, batch)
+        tokens_seen += BATCH * SEQ
+    wall = time.time() - t0
+    # evaluate with hardened RTN weights at the fine-tuned point
+    from repro.core.reconstruction import bake
+
+    weights2 = enumerate_weights(
+        model, params, make_batches(corpus, 1, 1, 8, seed=9)[0])
+    qstates2, embed_head2 = init_states(model, weights2, rc)
+    params_q = bake(model, params, qstates2, {}, embed_head2)
+    return params_q, wall, tokens_seen
+
+
+def main() -> list[dict]:
+    cfg, model, params, calib, evalb = get_bench_model()
+    fp = evaluate(model, params, evalb)
+    rows = [{"name": "fp32", "us_per_call": 0,
+             "derived": f"loss={fp['loss']:.4f}"}]
+
+    res = cached_brecq(model, params, calib,
+                       ReconConfig(w_bits=W_BITS, iters=RECON_ITERS),
+                       f"t2_brecq_w{W_BITS}")
+    ev = evaluate(model, res["params_q"], evalb)
+    calib_tokens = sum(int(b["tokens"].size) for b in calib)
+    brecq_wall = res["stats"].get("calib_wall_s", 0)
+    rows.append({"name": f"brecq_w{W_BITS}", "us_per_call": brecq_wall * 1e6,
+                 "derived": (f"loss={ev['loss']:.4f};wall_s={brecq_wall:.0f};"
+                             f"data_tokens={calib_tokens}")})
+
+    pq, wall, tokens = qat_ste(model, params, cfg)
+    evq = evaluate(model, pq, evalb)
+    rows.append({"name": f"qat_ste_w{W_BITS}", "us_per_call": wall * 1e6,
+                 "derived": (f"loss={evq['loss']:.4f};wall_s={wall:.0f};"
+                             f"data_tokens={tokens}")})
+    if brecq_wall > 0:
+        rows.append({"name": "speedup", "us_per_call": 0,
+                     "derived": f"qat_wall/brecq_wall={wall / brecq_wall:.1f}x;"
+                                f"data_ratio={tokens / calib_tokens:.1f}x"})
+    emit(rows, "table4")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Mixed-precision search demo (paper Sec. 3.4 end to end).
+
+    PYTHONPATH=src python examples/mixed_precision_search.py
+
+Calibrates unified 2/4/8-bit models, measures diagonal + intra-block
+sensitivities, runs the genetic algorithm under a model-size budget and
+reports the chosen per-layer bit-widths.
+"""
+import jax
+
+from repro.core import ReconConfig, quantize
+from repro.core.evaluate import evaluate
+from repro.core.mixed_precision import (GAConfig, genetic_search, model_bytes)
+from repro.core.sensitivity import measure
+from repro.data import Corpus, CorpusConfig, make_batches
+from repro.models import get_model
+from repro.optim import adam
+
+
+def main():
+    cfg, model = get_model("brecq_lm_100m", reduced=True)
+    corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
+    params = model.init(jax.random.PRNGKey(0))
+    acfg = adam.AdamConfig(lr=3e-3, grad_clip=1.0)
+    state = adam.init(params)
+    step = jax.jit(lambda p, s, b: adam.update(
+        acfg, jax.grad(lambda q: model.loss(q, b, remat='none'))(p), s, p))
+    for i in range(200):
+        params, state = step(params, state,
+                             make_batches(corpus, 1, 16, 64, seed=0, start_step=i)[0])
+
+    calib = make_batches(corpus, 6, 8, 64, seed=1, start_step=1000)
+    evalb = make_batches(corpus, 2, 16, 64, seed=2, start_step=2000)
+
+    print("== unified-precision calibrations (2/4/8-bit) ==")
+    results = {}
+    for b in (2, 4, 8):
+        results[b] = quantize(model, params, calib, ReconConfig(w_bits=b, iters=80))
+        ev = evaluate(model, results[b].params_q, evalb)
+        print(f"  W{b}: loss {ev['loss']:.4f}")
+
+    print("== sensitivity lookup table ==")
+    sens = measure(model, params, calib[:3], results, n_samples=16)
+    print(f"  {len(sens.diag)} diagonal, {len(sens.offdiag)} intra-block entries")
+
+    full8 = model_bytes(sens.shapes, {p: 8 for p in sens.shapes})
+    for frac in (0.35, 0.5, 0.75):
+        assign, info = genetic_search(
+            sens, lambda a: model_bytes(sens.shapes, a), full8 * frac,
+            GAConfig(pop_size=50, iters=100))
+        res = quantize(model, params, calib,
+                       ReconConfig(w_bits=4, iters=80, per_layer_bits=assign))
+        ev = evaluate(model, res.params_q, evalb)
+        hist = {b: sum(1 for v in assign.values() if v == b) for b in (2, 4, 8)}
+        print(f"  budget {frac:.0%}: loss {ev['loss']:.4f}  bits histogram {hist}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serve a quantized model with batched requests.
+
+    PYTHONPATH=src python examples/serve_quantized.py --quant 4
+
+Thin wrapper over launch/serve.py: builds (or loads) a model, packs the
+weights to int4/int8, prefills a batch of prompts and decodes with the
+jitted step — the host-scale version of the decode_32k dry-run cells.
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "brecq_lm_100m", "--reduced",
+                            "--quant", "4", "--batch", "8",
+                            "--prompt-len", "64", "--gen-len", "32"]
+    serve.main(argv)

@@ -1,0 +1,64 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizer import QConfig, init_qstate, quantize_int
+from repro.kernels.qmatmul.kernel import qmatmul
+from repro.kernels.qmatmul.ops import pack_weights, qmm
+from repro.kernels.qmatmul.ref import qmatmul_ref
+from repro.kernels.kvattn.kernel import kv_decode
+from repro.kernels.kvattn.ops import quantize_kv
+from repro.kernels.kvattn.ref import kv_decode_ref
+from repro.kernels.fakequant.kernel import fakequant
+from repro.kernels.fakequant.ref import fakequant_ref
+
+rng = np.random.default_rng(0)
+
+# --- qmatmul ---
+for bits in (8, 4, 2):
+    for (M, K, N, G) in [(8, 256, 128, 128), (128, 512, 256, 1)]:
+        w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+        cfg = QConfig(bits=bits, channel_axis=-1,
+                      group_size=(G if G > 1 else None))
+        st = init_qstate(w, cfg)
+        codes = quantize_int(w, st, cfg)
+        scales = st.scale.reshape(-1, N)
+        x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+        ref = qmatmul_ref(x, pack_weights(codes, scales, bits).packed, scales, bits)
+        out = qmatmul(x, pack_weights(codes, scales, bits).packed, scales,
+                      bits=bits, bm=8 if M == 8 else 128, interpret=True)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        print(f"qmatmul bits={bits} M{M} K{K} N{N} G{G}: maxerr {err:.2e}")
+        assert err < 1e-3
+
+# --- kvattn ---
+for (B, H, Kh, hd, S, bs) in [(2, 8, 2, 64, 256, 128), (1, 4, 4, 32, 128, 128)]:
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Kh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Kh, hd)), jnp.float32)
+    k8, v8, ks, vs = quantize_kv(k, v)
+    kpos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cur = jnp.full((B,), S // 2, jnp.int32)
+    ref = kv_decode_ref(q, k8, v8, ks, vs, kpos, cur)
+    out = kv_decode(q, k8, v8, ks, vs, kpos, cur, bs=bs, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    print(f"kvattn B{B} H{H} K{Kh} S{S}: maxerr {err:.2e}")
+    assert err < 1e-4
+    # windowed
+    ref = kv_decode_ref(q, k8, v8, ks, vs, kpos, cur, window=64)
+    out = kv_decode(q, k8, v8, ks, vs, kpos, cur, window=64, bs=bs, interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+# --- fakequant ---
+for hard in (False, True):
+    K, N = 256, 256
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    s = jnp.asarray(rng.uniform(0.01, 0.1, size=(1, N)), jnp.float32)
+    ref = fakequant_ref(w, v, s, -8, 7, hard)
+    out = fakequant(w, v, s, qmin=-8, qmax=7, hard=hard, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    print(f"fakequant hard={hard}: maxerr {err:.2e}")
+    assert err < 1e-6
+
+print("kernels ok")

@@ -1,0 +1,63 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from artifacts.
+
+Usage: PYTHONPATH=src python scripts/gen_experiments.py
+Writes artifacts/experiments_sections.md with §Dry-run and §Roofline
+tables; the narrative in EXPERIMENTS.md references/incorporates them.
+"""
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+ART = ROOT / "artifacts" / "dryrun"
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.1f}"
+
+
+def main():
+    rows = []
+    for f in sorted(ART.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("tag"):
+            continue
+        rows.append(d)
+
+    out = []
+    out.append("### §Dry-run (generated)\n")
+    out.append("| arch | shape | mesh | strategy | chips | GB/chip (tpu-corr) | fits 16GB | compile s | collectives (counts) |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for d in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        cc = d["hlo"]["collective_counts"]
+        cc_s = " ".join(f"{k.split('-')[-1]}:{int(v)}" for k, v in sorted(cc.items()))
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['strategy']} "
+            f"| {d['n_chips']} | {fmt_bytes(d.get('per_chip_bytes_tpu_corrected', d['per_chip_bytes']))} "
+            f"| {'Y' if d.get('fits_16gb') else 'N'} | {d['compile_s']} | {cc_s} |")
+
+    out.append("\n### §Roofline (generated, single-pod 16x16 = 256 chips)\n")
+    out.append("| arch | shape | strat | compute s | memory s | collective s | bound | MODEL_FLOPs/chip | HLO_FLOPs/chip | useful | roofline frac | mem frac | one-line fix |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    fixes = {
+        "compute": "raise intensity: larger per-chip batch / fuse small ops",
+        "memory": "cut HBM bytes: W4/W2 weights + int8 KV (BRECQ deployment), leaner remat",
+        "collective": "reshard: fewer TP psums / cheaper EP dispatch; overlap with compute",
+    }
+    for d in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if d["mesh"] != "single":
+            continue
+        r = d["roofline"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['strategy']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| **{r['bottleneck']}** | {r['model_flops_per_chip']:.3e} "
+            f"| {r['hlo_flops_per_chip']:.3e} | {r['useful_ratio']:.3f} "
+            f"| {r['roofline_frac']:.3f} | {r.get('mem_frac', 0):.3f} "
+            f"| {fixes[r['bottleneck']]} |")
+
+    (ROOT / "artifacts" / "experiments_sections.md").write_text("\n".join(out))
+    print(f"wrote artifacts/experiments_sections.md ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

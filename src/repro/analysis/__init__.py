@@ -1,0 +1,2 @@
+from .hlo import analyze_module  # noqa: F401
+from .roofline import Roofline, from_hlo, model_flops  # noqa: F401

@@ -1,0 +1,125 @@
+"""Roofline terms per (arch x shape x mesh) from the compiled dry-run.
+
+Hardware constants (TPU v5e, per assignment):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (seconds, per step, per chip):
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+HLO_FLOPs / bytes / collective_bytes come from the while-aware HLO parser
+(analysis/hlo.py) applied to the compiled module — on a GSPMD module the
+shapes are already the per-chip shards, so the totals are per-chip.
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..configs.base import ArchConfig, ShapeSpec
+from .hlo import HLOSummary, analyze_module
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_chip: float
+    hlo_flops_per_chip: float
+    useful_ratio: float  # MODEL_FLOPS / HLO_FLOPs
+    roofline_frac: float  # useful compute time / dominant term
+    mem_frac: float = 0.0  # decode: ideal (params+cache once) / HLO bytes
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def ideal_serve_bytes(cfg: ArchConfig, shape: ShapeSpec, n_chips: int,
+                      w_bits: int = 16) -> float:
+    """Per-chip lower bound for one decode step: stream active weights
+    once + read the live cache once (both already sharded over chips)."""
+    param_bytes = active_params(cfg) * w_bits / 8.0
+    B, S = shape.global_batch, shape.seq_len
+    hd, K = cfg.hd, cfg.n_kv_heads
+    cache = 0.0
+    for _ in range(1):
+        if cfg.family == "ssm":
+            di = int(cfg.d_model * cfg.xlstm_expansion)
+            H = cfg.n_heads
+            cache = cfg.n_layers * B * (H * (di // max(H, 1)) ** 2) * 4.0
+        else:
+            slots = S
+            win = cfg.window or (cfg.hymba_window if cfg.family == "hybrid" else None)
+            if cfg.local_global:
+                nl, ng = cfg.local_global
+                per_group = nl * min(S, cfg.local_window) + ng * S
+                slots_total = per_group * (cfg.n_layers // (nl + ng))
+                cache = B * slots_total * K * hd * 2 * 2.0
+                slots = None
+            elif win:
+                slots = min(S, win)
+            if slots is not None:
+                cache = cfg.n_layers * B * slots * K * hd * 2 * 2.0
+            if cfg.family == "hybrid":
+                di = int(cfg.d_model * cfg.ssm_expansion)
+                cache += cfg.n_layers * B * di * cfg.ssm_state * 4.0
+    return (param_bytes + cache) / n_chips
+
+
+def active_params(cfg: ArchConfig) -> float:
+    """Parameters touched per token (MoE: top-k + shared experts only)."""
+    from ..dist.sharding import estimate_params
+
+    total = estimate_params(cfg)
+    if cfg.moe:
+        d = cfg.d_model
+        expert = 3 * d * cfg.moe.d_ff_expert
+        inactive = (cfg.moe.n_experts - cfg.moe.top_k) * expert
+        n_moe_layers = cfg.n_layers - cfg.moe.first_k_dense
+        total -= n_moe_layers * inactive
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec, n_chips: int) -> float:
+    """6*N_active*D for train; 2*N_active*D for inference, per chip.
+
+    decode shapes process global_batch tokens per step (D = batch)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / n_chips
+    tokens = shape.global_batch  # one token per sequence per step
+    return 2.0 * n * tokens / n_chips
+
+
+def from_hlo(hlo_text: str, cfg: ArchConfig, shape: ShapeSpec,
+             n_chips: int, w_bits: int = 16) -> tuple[Roofline, HLOSummary]:
+    summ = analyze_module(hlo_text)
+    compute_s = summ.flops / PEAK_FLOPS
+    memory_s = summ.bytes / HBM_BW
+    collective_s = summ.collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, n_chips)
+    useful = mf / summ.flops if summ.flops else 0.0
+    # fraction of the dominant term that is useful model compute:
+    frac = (mf / PEAK_FLOPS) / max(terms.values()) if max(terms.values()) else 0.0
+    mem_frac = 0.0
+    if shape.kind == "decode" and summ.bytes:
+        mem_frac = ideal_serve_bytes(cfg, shape, n_chips, w_bits) / summ.bytes
+    rl = Roofline(compute_s=compute_s, memory_s=memory_s,
+                  collective_s=collective_s, bottleneck=bottleneck,
+                  model_flops_per_chip=mf, hlo_flops_per_chip=summ.flops,
+                  useful_ratio=useful, roofline_frac=frac, mem_frac=mem_frac)
+    return rl, summ

@@ -1,0 +1,1 @@
+from .base import ArchConfig, MoEArch, ShapeSpec, SHAPES, applicable_shapes  # noqa: F401

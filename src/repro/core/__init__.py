@@ -1,0 +1,3 @@
+from .adaround import BetaSchedule  # noqa: F401
+from .quantizer import QConfig, QState, init_qstate, quantize_dequant  # noqa: F401
+from .reconstruction import PTQResult, ReconConfig, Walker, quantize  # noqa: F401

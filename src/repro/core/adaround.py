@@ -1,0 +1,106 @@
+"""AdaRound learned rounding (Nagel et al. 2020), as used by BRECQ.
+
+Weights are floor-quantized and a per-weight logit ``v`` chooses floor vs
+ceil through a rectified sigmoid.  During reconstruction the *soft*
+rounding value h(v) in [0,1] flows gradients; after calibration the
+rounding is hardened to {0,1} (Eq. 16 of the paper).
+
+The regularizer f_reg = sum(1 - |2 h(v) - 1|^beta) pushes h(v) to binary
+as beta anneals (Eq. 17).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .quantizer import QConfig, QState, _group_reshape
+
+Array = jax.Array
+
+# rectified-sigmoid stretch constants from the AdaRound paper
+ZETA = 1.1
+GAMMA = -0.1
+
+
+def rect_sigmoid(v: Array) -> Array:
+    """h(v) = clip(sigmoid(v) * (zeta - gamma) + gamma, 0, 1)."""
+    return jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def init_v(w: Array, st: QState, cfg: QConfig) -> Array:
+    """Initialise v so that soft-quantization reproduces round-to-nearest."""
+    if cfg.group_size is not None:
+        wg = _group_reshape(w, cfg)
+        frac = wg / st.scale - jnp.floor(wg / st.scale)
+        frac = frac.reshape(w.shape)
+    else:
+        frac = w / st.scale - jnp.floor(w / st.scale)
+    # invert h(v) = frac  =>  sigmoid(v) = (frac - gamma)/(zeta - gamma)
+    p = jnp.clip((frac - GAMMA) / (ZETA - GAMMA), 1e-4, 1 - 1e-4)
+    return jnp.log(p / (1 - p)).astype(jnp.float32)
+
+
+def soft_quant(w: Array, v: Array, st: QState, cfg: QConfig) -> Array:
+    """Differentiable AdaRound forward: s * clip(floor(w/s) + h(v), n, p)."""
+    if cfg.group_size is not None:
+        wg = _group_reshape(w, cfg)
+        hg = rect_sigmoid(v).reshape(wg.shape)
+        q = jnp.clip(jnp.floor(wg / st.scale) + hg + st.zero_point,
+                     cfg.qmin, cfg.qmax)
+        return ((q - st.zero_point) * st.scale).reshape(w.shape)
+    q = jnp.clip(jnp.floor(w / st.scale) + rect_sigmoid(v) + st.zero_point,
+                 cfg.qmin, cfg.qmax)
+    return (q - st.zero_point) * st.scale
+
+
+def hard_quant(w: Array, v: Array, st: QState, cfg: QConfig) -> Array:
+    """Post-calibration forward: h(v) hardened to {0, 1}."""
+    hard = (v >= 0).astype(w.dtype)
+    if cfg.group_size is not None:
+        wg = _group_reshape(w, cfg)
+        q = jnp.clip(jnp.floor(wg / st.scale) + hard.reshape(wg.shape)
+                     + st.zero_point, cfg.qmin, cfg.qmax)
+        return ((q - st.zero_point) * st.scale).reshape(w.shape)
+    q = jnp.clip(jnp.floor(w / st.scale) + hard + st.zero_point,
+                 cfg.qmin, cfg.qmax)
+    return (q - st.zero_point) * st.scale
+
+
+def hard_int_codes(w: Array, v: Array, st: QState, cfg: QConfig) -> Array:
+    """Integer codes after hardening (deployment path, feeds pack_int)."""
+    hard = (v >= 0).astype(jnp.float32)
+    if cfg.group_size is not None:
+        wg = _group_reshape(w, cfg)
+        q = jnp.clip(jnp.floor(wg / st.scale) + hard.reshape(wg.shape)
+                     + st.zero_point, cfg.qmin, cfg.qmax)
+        return q.reshape(w.shape).astype(jnp.int8)
+    q = jnp.clip(jnp.floor(w / st.scale) + hard + st.zero_point,
+                 cfg.qmin, cfg.qmax)
+    return q.astype(jnp.int8)
+
+
+def round_reg(v: Array, beta: Array) -> Array:
+    """f_reg = sum_i (1 - |2 h(v_i) - 1|^beta)."""
+    return jnp.sum(1.0 - jnp.abs(2.0 * rect_sigmoid(v) - 1.0) ** beta)
+
+
+@dataclasses.dataclass(frozen=True)
+class BetaSchedule:
+    """Anneal beta high->low so h(v) converges to binary.
+
+    ``warmup`` fraction of iterations applies no regularization at all
+    (AdaRound default 0.2), then beta decays linearly beta_hi -> beta_lo.
+    """
+
+    beta_hi: float = 20.0
+    beta_lo: float = 2.0
+    warmup: float = 0.2
+
+    def __call__(self, it: Array, total: int) -> tuple[Array, Array]:
+        """Returns (beta, reg_enabled)."""
+        t = jnp.clip((it / total - self.warmup) / (1.0 - self.warmup), 0.0, 1.0)
+        beta = self.beta_hi + (self.beta_lo - self.beta_hi) * t
+        enabled = (it >= self.warmup * total).astype(jnp.float32)
+        return beta, enabled

@@ -1,0 +1,337 @@
+"""PTQ baselines the paper compares against (Tables 2-4).
+
+* RTN            — round-to-nearest with minmax or MSE ("OMSE") scales.
+* Bias correction (Nagel et al. 2019) — RTN + per-layer expected-output
+                   correction folded into a bias term.
+* AdaQuant       (Hubara et al. 2020) — per-layer continuous weight
+                   perturbation optimized through an STE quantizer.
+* LAPQ           (Nahshan et al. 2019) — loss-aware per-layer clip-scale
+                   search on the task loss (coordinate descent flavour).
+
+All share the Walker/QuantHook machinery so accuracy comparisons are
+apples-to-apples with BRECQ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.common import NO_QUANT, QuantHook
+from ..optim import adam
+from . import lsq
+from .hooks import RTNHook
+from .quantizer import (QConfig, QState, fake_quant_ste, init_qstate,
+                        quantize_dequant)
+from .reconstruction import (ReconConfig, Walker, _apply_unit, _cap,
+                             _concat_batches, _LayerHook, _slice_batch, bake,
+                             enumerate_weights, init_states)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# RTN
+# ---------------------------------------------------------------------------
+
+
+def quantize_rtn(model, params, calib_batches, w_bits: int,
+                 a_bits: Optional[int] = None, scale_method: str = "mse",
+                 w_group: Optional[int] = None,
+                 keep_embed_head_8bit: bool = True):
+    """Round-to-nearest baseline. Activation scales from calibration minmax."""
+    rc = ReconConfig(w_bits=w_bits, a_bits=a_bits, scale_method=scale_method,
+                     w_group=w_group, keep_embed_head_8bit=keep_embed_head_8bit)
+    calib = _concat_batches(calib_batches)
+    probe = _slice_batch(calib, jnp.arange(1))
+    weights = enumerate_weights(model, params, probe)
+    qstates, embed_head = init_states(model, weights, rc)
+    params_q = bake(model, params, qstates, {}, embed_head)
+    act_scales = {}
+    if a_bits is not None:
+        walker = Walker(model)
+        act_scales = _calibrate_act_scales(model, walker, params_q, calib, a_bits)
+    return params_q, act_scales
+
+
+def _calibrate_act_scales(model, walker, params_q, calib, a_bits: int) -> dict:
+    """Minmax activation scales captured on the quantized model."""
+
+    class _AllCap(QuantHook):
+        def __init__(self):
+            self.scales: dict[str, Array] = {}
+
+        def act(self, path, x):
+            s = lsq.init_act_scale(x, a_bits, symmetric=True)
+            prev = self.scales.get(path)
+            self.scales[path] = s if prev is None else jnp.maximum(prev, s)
+            return x
+
+    cap = _AllCap()
+    walker.run(params_q, _slice_batch(calib, jnp.arange(min(8, calib["tokens"].shape[0]))), cap)
+    return {k: jax.device_get(v) * 1.0 for k, v in cap.scales.items()}
+
+
+# ---------------------------------------------------------------------------
+# Bias correction
+# ---------------------------------------------------------------------------
+
+
+def quantize_bias_correction(model, params, calib_batches, w_bits: int,
+                             scale_method: str = "minmax"):
+    """RTN + expected-output correction: b += E[x](W - W_q), per layer.
+
+    Matches Nagel et al. 2019 (no data-free BN trick here; we have real
+    calibration activations). Only 2-D linears are corrected; stacked MoE
+    expert weights stay RTN (noted in DESIGN.md).
+    """
+    rc = ReconConfig(w_bits=w_bits, scale_method=scale_method)
+    calib = _concat_batches(calib_batches)
+    probe = _slice_batch(calib, jnp.arange(1))
+    weights = enumerate_weights(model, params, probe)
+    qstates, embed_head = init_states(model, weights, rc)
+    walker = Walker(model)
+
+    x_q, _ = walker.stem(params, calib, RTNHook(embed_head))
+    mem_q = None
+    corrections: dict[str, Array] = {}
+    v_done: dict[str, Array] = {}  # unused, hook API compat
+
+    for bi in range(len(walker.blocks())):
+        rec_hook = _BiasCorrHook(qstates, corrections)
+        x_q = jax.jit(lambda x, m, h=rec_hook: _apply_unit(
+            walker, params, [bi], h, x, calib, m))(x_q, mem_q)
+        corrections.update(rec_hook.new_corr)
+        if walker.encdec and bi == walker.enc_n - 1:
+            mem_q, x_q = walker.boundary_transition(params, calib, x_q, RTNHook(embed_head))
+
+    params_q = bake(model, params, qstates, {}, embed_head)
+    params_q = _install_biases(params_q, corrections)
+    return params_q, {}
+
+
+class _BiasCorrHook(QuantHook):
+    """Quantizes weights RTN and records E[x](W - Wq) for 2-D linears."""
+
+    def __init__(self, qstates, existing):
+        self.qstates = qstates
+        self.new_corr: dict[str, Array] = {}
+        self._pending: dict[str, Array] = {}
+        self.existing = existing
+
+    def act(self, path, x):
+        if path in self.qstates:
+            self._pending[path] = x
+        return x
+
+    def weight(self, path, w):
+        if path not in self.qstates:
+            return w
+        st, cfg = self.qstates[path]
+        wq = quantize_dequant(w, st, cfg)
+        x = self._pending.get(path)
+        if x is not None and w.ndim == 2:
+            xm = jnp.mean(x.reshape(-1, x.shape[-1]).astype(jnp.float32), axis=0)
+            self.new_corr[path] = xm @ (w - wq).astype(jnp.float32)
+        return wq
+
+
+def _install_biases(params_q, corrections: dict[str, Array]):
+    for path, corr in corrections.items():
+        parts = path.split("/")
+        if "." not in parts[0]:
+            continue  # embed/head: skip
+        sname, ri = parts[0].rsplit(".", 1)
+        ri = int(ri)
+        node = params_q[sname]
+        for k in parts[1:]:
+            node = node[k]
+        if "b" not in node:
+            stacked = node["w"]
+            node["b"] = jnp.zeros((stacked.shape[0], corr.shape[-1]), jnp.float32)
+        node["b"] = node["b"].at[ri].add(corr)
+    return params_q
+
+
+# ---------------------------------------------------------------------------
+# AdaQuant
+# ---------------------------------------------------------------------------
+
+
+def quantize_adaquant(model, params, calib_batches, w_bits: int,
+                      a_bits: Optional[int] = None, iters: int = 400,
+                      calib_bs: int = 8, lr: float = 1e-3, seed: int = 0):
+    """Per-layer continuous weight perturbation through an STE quantizer."""
+    rc = ReconConfig(w_bits=w_bits, a_bits=a_bits, scale_method="mse")
+    calib = _concat_batches(calib_batches)
+    N = calib["tokens"].shape[0]
+    probe = _slice_batch(calib, jnp.arange(1))
+    weights = enumerate_weights(model, params, probe)
+    qstates, embed_head = init_states(model, weights, rc)
+    walker = Walker(model)
+    rng = np.random.default_rng(seed)
+
+    x_fp, _ = walker.stem(params, calib)
+    x_q, _ = walker.stem(params, calib, RTNHook(embed_head))
+    mem_fp = mem_q = None
+    deltas: dict[str, Array] = {}
+    s_done: dict[str, Array] = {}
+
+    for bi in range(len(walker.blocks())):
+        from .hooks import RecordingHook
+
+        rec = RecordingHook(capture_acts=True)
+        _apply_unit(walker, params, [bi], rec, x_q[:1], _slice_batch(calib, jnp.arange(1)),
+                    None if mem_q is None else mem_q[:1])
+        wpaths = [p for p in rec.weights if p in qstates]
+        z_fp = jax.jit(lambda x, m: _apply_unit(walker, params, [bi], NO_QUANT, x, calib, m))(x_fp, mem_fp)
+        for path in wpaths:
+            W = weights[path]
+            st, qc = qstates[path]
+            done_hook_states = {p: deltas[p] for p in deltas}
+            xin_q = jax.jit(lambda x, m: _cap_adaquant(
+                walker, params, bi, qstates, deltas, s_done, a_bits, path, x, calib, m))(x_q, mem_q)
+            xin_fp = jax.jit(lambda x, m: _cap(walker, params, bi, qstates, {}, {},
+                                               dataclasses.replace(rc, a_bits=None),
+                                               path, x, calib, m))(x_fp, mem_fp)
+            zt = jnp.matmul(xin_fp, W.astype(xin_fp.dtype))
+            if a_bits is not None:
+                s_done[path] = lsq.init_act_scale(xin_q, a_bits, symmetric=True)
+            opt = {"dw": jnp.zeros_like(W)}
+
+            def layer_loss(opt, xb, zb):
+                wq = fake_quant_ste(W + opt["dw"], st, qc)
+                x = xb
+                if a_bits is not None:
+                    x = lsq.lsq_quant(x, s_done[path], a_bits, True)
+                z = jnp.matmul(x, wq.astype(x.dtype))
+                return jnp.mean((z - zb).astype(jnp.float32) ** 2)
+
+            grad_fn = jax.jit(jax.value_and_grad(layer_loss))
+            acfg = adam.AdamConfig(lr=lr)
+            ostate = adam.init(opt)
+            step_fn = jax.jit(lambda o, s, g: adam.update(acfg, g, s, o))
+            for it in range(iters):
+                idx = jnp.asarray(rng.choice(N, size=min(calib_bs, N), replace=False))
+                _, g = grad_fn(opt, xin_q[idx], zt[idx])
+                opt, ostate = step_fn(opt, ostate, g)
+            deltas[path] = opt["dw"]
+        x_q = jax.jit(lambda x, m: _apply_unit(
+            walker, params, [bi],
+            _AdaQuantHook(qstates, deltas, s_done, a_bits), x, calib, m))(x_q, mem_q)
+        x_fp = z_fp
+        if walker.encdec and bi == walker.enc_n - 1:
+            mem_fp, x_fp = walker.boundary_transition(params, calib, x_fp)
+            mem_q, x_q = walker.boundary_transition(params, calib, x_q, RTNHook(embed_head))
+
+    # bake: w -> qdq(w + dw)
+    adj = {p: (qstates[p], deltas[p]) for p in deltas}
+    params_q = bake(model, params,
+                    {p: qstates[p] for p in qstates if p not in deltas}, {}, embed_head)
+    params_q = _bake_deltas(model, params_q, adj)
+    return params_q, dict(s_done)
+
+
+class _AdaQuantHook(QuantHook):
+    def __init__(self, qstates, deltas, s_done, a_bits):
+        self.qstates = qstates
+        self.deltas = deltas
+        self.s_done = s_done
+        self.a_bits = a_bits
+
+    def weight(self, path, w):
+        if path in self.deltas:
+            st, cfg = self.qstates[path]
+            return quantize_dequant(w + self.deltas[path], st, cfg)
+        return w
+
+    def act(self, path, x):
+        if self.a_bits is not None and path in self.s_done:
+            return lsq.lsq_quant(x, self.s_done[path], self.a_bits, True)
+        return x
+
+
+def _cap_adaquant(walker, params, bi, qstates, deltas, s_done, a_bits, path, x, calib, mem):
+    hook = _AdaQuantHook(qstates, deltas, s_done, a_bits)
+    cap: dict[str, Array] = {}
+
+    orig_act = hook.act
+
+    def act(p, xx):
+        xx = orig_act(p, xx)
+        if p == path:
+            cap["x"] = xx
+        return xx
+
+    hook.act = act
+    _apply_unit(walker, params, [bi], hook, x, calib, mem)
+    return cap["x"]
+
+
+def _bake_deltas(model, params_q, adj):
+    from .reconstruction import bake as _  # noqa: F401  (path helper reuse)
+
+    def set_leaf(path, fn):
+        parts = path.split("/")
+        sname, ri = parts[0].rsplit(".", 1)
+        ri = int(ri)
+        node = params_q[sname]
+        keys = parts[1:] + ["w"]
+        for k in keys[:-1]:
+            node = node[k]
+        leaf = node[keys[-1]]
+        node[keys[-1]] = leaf.at[ri].set(fn(leaf[ri]))
+
+    for path, ((st, cfg), dw) in adj.items():
+        set_leaf(path, lambda w, st=st, cfg=cfg, dw=dw: quantize_dequant(w + dw, st, cfg))
+    return params_q
+
+
+# ---------------------------------------------------------------------------
+# LAPQ-style loss-aware scale search
+# ---------------------------------------------------------------------------
+
+
+def quantize_lapq(model, params, calib_batches, w_bits: int,
+                  a_bits: Optional[int] = None,
+                  ratios=(0.5, 0.6, 0.7, 0.8, 0.9, 1.0), rounds: int = 1):
+    """Coordinate-descent over per-layer clip ratios minimising task loss."""
+    rc = ReconConfig(w_bits=w_bits, a_bits=a_bits, scale_method="minmax")
+    calib = _concat_batches(calib_batches)
+    probe = _slice_batch(calib, jnp.arange(min(8, calib["tokens"].shape[0])))
+    weights = enumerate_weights(model, params, _slice_batch(calib, jnp.arange(1)))
+    qstates, embed_head = init_states(model, weights, rc)
+    walker = Walker(model)
+
+    paths = list(qstates.keys())
+    chosen = {p: 1.0 for p in paths}
+
+    def loss_with(scales: dict[str, float]) -> float:
+        states = {p: (QState(qstates[p][0].scale * scales[p], qstates[p][0].zero_point),
+                      qstates[p][1]) for p in paths}
+        states.update(embed_head)
+        hook = RTNHook(states)
+        return float(walker.loss(params, probe, hook))
+
+    eval_fn = loss_with
+    for _ in range(rounds):
+        for p in paths:
+            best_r, best_l = chosen[p], None
+            for r in ratios:
+                trial = dict(chosen)
+                trial[p] = r
+                l = eval_fn(trial)
+                if best_l is None or l < best_l:
+                    best_l, best_r = l, r
+            chosen[p] = best_r
+
+    states = {p: (QState(qstates[p][0].scale * chosen[p], qstates[p][0].zero_point),
+                  qstates[p][1]) for p in paths}
+    params_q = bake(model, params, states, {}, embed_head)
+    act_scales = {}
+    if a_bits is not None:
+        act_scales = _calibrate_act_scales(model, walker, params_q, calib, a_bits)
+    return params_q, act_scales

@@ -1,0 +1,43 @@
+"""Quantized-model evaluation: perplexity / loss / top-1 next-token accuracy.
+
+The LM analogue of the paper's ImageNet top-1 columns. All methods are
+evaluated through the same Walker so FP / RTN / BRECQ comparisons share
+one code path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import NO_QUANT
+from .hooks import ServeHook
+from .reconstruction import Walker
+
+
+def evaluate(model, params, batches: list[dict], act_scales: Optional[dict] = None,
+             a_bits: Optional[int] = None) -> dict:
+    """Returns {'loss', 'ppl', 'top1'} averaged over eval batches."""
+    walker = Walker(model)
+    hook = ServeHook(act_scales, a_bits) if (act_scales and a_bits) else NO_QUANT
+
+    @jax.jit
+    def batch_metrics(batch):
+        logits = walker.run(params, batch, hook)
+        tokens = batch["tokens"]
+        lg, lb = logits[:, :-1].astype(jnp.float32), tokens[:, 1:]
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+        nll = logz - ll
+        top1 = (jnp.argmax(lg, -1) == lb).astype(jnp.float32)
+        return jnp.mean(nll), jnp.mean(top1)
+
+    losses, accs = [], []
+    for b in batches:
+        l, a = batch_metrics(b)
+        losses.append(float(l))
+        accs.append(float(a))
+    loss = sum(losses) / len(losses)
+    return {"loss": loss, "ppl": float(jnp.exp(jnp.asarray(loss))),
+            "top1": sum(accs) / len(accs)}

@@ -1,0 +1,57 @@
+"""Diagonal Fisher (squared-gradient) capture at block outputs.
+
+BRECQ Sec. 3.3: the pre-activation Hessian of each reconstruction unit is
+approximated by the diagonal FIM, whose entries are the squared gradients
+of the task loss w.r.t. the unit's output. We capture them for *all*
+blocks in one backward pass with the epsilon trick: add a zero
+perturbation at every block output; d(loss)/d(eps) is exactly dL/dz.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def block_grads(model, params, batch: dict) -> list[Array]:
+    """Per-block output gradients dL/dz_i of the FP model on one batch.
+
+    Returns a list aligned with ``model_blocks(model)``: each entry has
+    the block-output shape (B, S, d).
+    """
+    blocks = model_blocks(model)
+
+    def loss_fn(eps_list):
+        x, ctx = model.begin(params, batch)
+        for (stack, ri), eps in zip(blocks, eps_list):
+            p_i = jax.tree.map(lambda a: a[ri], params[stack.name])
+            x, _ = model.apply_block(ctx, stack, p_i, x)
+            x = x + eps
+        logits = model.finish(params, x, ctx)
+        tokens = batch["tokens"]
+        from ..models.common import softmax_xent
+
+        return softmax_xent(logits[:, :-1], tokens[:, 1:])
+
+    x0, _ = model.begin(params, batch)
+    eps0 = [jnp.zeros_like(x0) for _ in blocks]
+    return jax.grad(loss_fn)(eps0)
+
+
+def model_blocks(model) -> list[tuple[Any, int]]:
+    """Flattened (stack, rel_idx) order of all reconstruction blocks."""
+    out = []
+    for stack in brecq_stacks(model):
+        for ri in range(stack.n):
+            out.append((stack, ri))
+    return out
+
+
+def brecq_stacks(model):
+    """Stacks walked by BRECQ, in forward order (encoder first for enc-dec)."""
+    if hasattr(model, "enc_stack"):
+        return [model.enc_stack, model.dec_stack]
+    return model.stacks

@@ -1,0 +1,114 @@
+"""Quantization hooks: the glue between models (which only know
+``QuantHook``) and the BRECQ machinery (quantizer/adaround/lsq)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import QuantHook
+from . import adaround, lsq
+from .quantizer import QConfig, QState, quantize_dequant
+
+Array = jax.Array
+
+
+class RecordingHook(QuantHook):
+    """Records every (path, shape) the model touches; used to enumerate
+    quantizable layers and to capture linear inputs for layer-wise
+    reconstruction."""
+
+    def __init__(self, capture_acts: bool = False):
+        self.weights: dict[str, tuple] = {}
+        self.acts: dict[str, Array] = {}
+        self.capture_acts = capture_acts
+
+    def weight(self, path: str, w: Array) -> Array:
+        self.weights[path] = tuple(w.shape)
+        return w
+
+    def act(self, path: str, x: Array) -> Array:
+        if self.capture_acts:
+            self.acts[path] = x
+        return x
+
+
+class RTNHook(QuantHook):
+    """Round-to-nearest fake quantization per path (baseline + init)."""
+
+    def __init__(self, states: dict[str, tuple[QState, QConfig]],
+                 act_scales: Optional[dict[str, Array]] = None,
+                 a_bits: Optional[int] = None):
+        self.states = states
+        self.act_scales = act_scales or {}
+        self.a_bits = a_bits
+
+    def weight(self, path: str, w: Array) -> Array:
+        if path in self.states:
+            st, cfg = self.states[path]
+            return quantize_dequant(w, st, cfg)
+        return w
+
+    def act(self, path: str, x: Array) -> Array:
+        if self.a_bits is not None and path in self.act_scales:
+            return lsq.lsq_quant(x, self.act_scales[path], self.a_bits, True)
+        return x
+
+
+class AdaRoundHook(QuantHook):
+    """Soft (differentiable) or hard AdaRound weights + LSQ activations.
+
+    ``opt`` is the pytree of optimization variables: {'v': {path: arr},
+    's': {path: scalar}} so jax.grad can differentiate through the hook.
+    """
+
+    def __init__(self, states: dict[str, tuple[QState, QConfig]],
+                 opt: dict, a_bits: Optional[int] = None, soft: bool = True):
+        self.states = states
+        self.opt = opt
+        self.a_bits = a_bits
+        self.soft = soft
+
+    def weight(self, path: str, w: Array) -> Array:
+        if path not in self.states or path not in self.opt["v"]:
+            return w
+        st, cfg = self.states[path]
+        fn = adaround.soft_quant if self.soft else adaround.hard_quant
+        return fn(w, self.opt["v"][path], st, cfg)
+
+    def act(self, path: str, x: Array) -> Array:
+        if self.a_bits is None or path not in self.opt.get("s", {}):
+            return x
+        return lsq.lsq_quant(x, self.opt["s"][path], self.a_bits, True)
+
+
+class ServeHook(QuantHook):
+    """Post-calibration serving hook: weights are already baked into the
+    params; only activation fake-quant remains."""
+
+    def __init__(self, act_scales: dict[str, Array], a_bits: int):
+        self.act_scales = act_scales
+        self.a_bits = a_bits
+
+    def act(self, path: str, x: Array) -> Array:
+        s = self.act_scales.get(path)
+        if s is None:
+            return x
+        return lsq.lsq_quant(x, s, self.a_bits, True)
+
+
+class StackedActHook(QuantHook):
+    """Activation hook for the scan-based forward: scales for the current
+    block are a per-path dict sliced out of the stacked (n, ...) tree."""
+
+    def __init__(self, scales: dict[str, Array], a_bits: int):
+        self.scales = scales
+        self.a_bits = a_bits
+
+    def act(self, path: str, x: Array) -> Array:
+        s = self.scales.get(path)
+        if s is None:
+            return x
+        return lsq.lsq_quant(x, s, self.a_bits, True)

@@ -1,0 +1,63 @@
+"""Learned-step-size (LSQ, Esser et al. 2020) activation quantization.
+
+BRECQ quantizes activations by learning only the step size ``s`` per
+tensor with the gradient of Eq. (18):
+
+    dL/ds = dL/dx_hat * ( -x/s + x_hat/s )      inside the range
+    dL/ds = dL/dx_hat * qmin_or_qmax            outside (clipped)
+
+Weights use AdaRound; activations cannot (they change per input), so the
+step size is the only learnable.  Per the paper's appendix B.4.4 we do
+NOT apply the LSQ gradient scale.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_act_scale(x: Array, bits: int, symmetric: bool = False) -> Array:
+    """Init from the first calibration batch: minmax over the tensor."""
+    if symmetric:
+        qmax = 2 ** (bits - 1) - 1
+        return jnp.maximum(jnp.max(jnp.abs(x)) / qmax, 1e-8).astype(jnp.float32)
+    qmax = 2**bits - 1
+    return jnp.maximum(jnp.max(x) / qmax, 1e-8).astype(jnp.float32)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_quant(x: Array, s: Array, bits: int, symmetric: bool = False) -> Array:
+    """Fake-quantize ``x`` with learnable step ``s`` (scalar per tensor)."""
+    if symmetric:
+        n, p = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    else:
+        n, p = 0, 2**bits - 1
+    return jnp.clip(jnp.round(x / s), n, p) * s
+
+
+def _lsq_fwd(x, s, bits, symmetric):
+    return lsq_quant(x, s, bits, symmetric), (x, s)
+
+
+def _lsq_bwd(bits, symmetric, res, g):
+    x, s = res
+    if symmetric:
+        n, p = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    else:
+        n, p = 0, 2**bits - 1
+    xs = x / s
+    in_range = (xs >= n) & (xs <= p)
+    # dL/dx: straight-through inside range
+    gx = g * in_range
+    # dL/ds per Eq. (18)
+    rounded = jnp.clip(jnp.round(xs), n, p)
+    ds_elem = jnp.where(in_range, rounded - xs, rounded)  # clipped -> n or p
+    gs = jnp.sum(g * ds_elem).astype(s.dtype).reshape(s.shape)
+    return gx, gs
+
+
+lsq_quant.defvjp(_lsq_fwd, _lsq_bwd)

@@ -1,0 +1,265 @@
+"""Uniform quantizers: the parameter-space primitives BRECQ builds on.
+
+Everything here is functional and jit-safe. A quantizer is described by a
+static :class:`QConfig` plus a pytree of per-tensor state (``QState``:
+scales and, for AdaRound, the rounding logits ``v``).
+
+Paper mapping (Sec. 2):
+  * uniform symmetric grid  Q_b = s * {-2^{b-1}, ..., 2^{b-1}-1}
+  * scale init either min-max or the MSE-optimal grid search (the
+    "OMSE" baseline in Table 2 uses the same search).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QConfig:
+    """Static description of a uniform quantizer.
+
+    Attributes:
+      bits: bit-width b; grid has 2^b levels.
+      symmetric: symmetric signed grid (weights) vs asymmetric unsigned
+        (post-ReLU/softmax activations use ``symmetric=False``).
+      channel_axis: axis that keeps its own scale (per-channel); ``None``
+        means one scale per tensor.
+      group_size: optional sub-channel grouping along the *reduction*
+        axis (axis 0 for (in, out) weight layout); each group of
+        ``group_size`` rows shares a scale. TPU-friendly values are
+        multiples of 128. ``None`` disables grouping.
+      scale_method: 'minmax' | 'mse'.
+    """
+
+    bits: int = 8
+    symmetric: bool = True
+    channel_axis: Optional[int] = None
+    group_size: Optional[int] = None
+    scale_method: str = "minmax"
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.symmetric else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.symmetric else 2**self.bits - 1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QState:
+    """Learnable / derived quantizer state. A pytree."""
+
+    scale: Array  # broadcastable against the tensor
+    zero_point: Array  # 0 for symmetric
+
+    def tree_flatten(self):
+        return (self.scale, self.zero_point), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+# ---------------------------------------------------------------------------
+# scale initialisation
+# ---------------------------------------------------------------------------
+
+
+def _reduce_axes(x: Array, cfg: QConfig) -> tuple[int, ...]:
+    if cfg.channel_axis is None:
+        return tuple(range(x.ndim))
+    ax = cfg.channel_axis % x.ndim
+    return tuple(i for i in range(x.ndim) if i != ax)
+
+
+def _group_reshape(x: Array, cfg: QConfig) -> Array:
+    """Reshape (..., in, out) -> (..., groups, group_size, out).
+
+    Grouping is along the *reduction* axis (-2) so it applies both to 2-D
+    linear weights and to stacked (E, in, out) MoE expert weights.
+    """
+    assert x.ndim >= 2, "group quantization expects (..., in, out) weights"
+    g = cfg.group_size
+    assert g is not None and x.shape[-2] % g == 0, (x.shape, g)
+    return x.reshape(*x.shape[:-2], x.shape[-2] // g, g, x.shape[-1])
+
+
+def _minmax_scale(x: Array, cfg: QConfig) -> QState:
+    axes = _reduce_axes(x, cfg)
+    if cfg.symmetric:
+        amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+        scale = jnp.maximum(amax / cfg.qmax, 1e-8)
+        zp = jnp.zeros_like(scale)
+    else:
+        lo = jnp.min(x, axis=axes, keepdims=True)
+        hi = jnp.max(x, axis=axes, keepdims=True)
+        scale = jnp.maximum((hi - lo) / (cfg.qmax - cfg.qmin), 1e-8)
+        zp = jnp.round(-lo / scale)
+    return QState(scale.astype(jnp.float32), zp.astype(jnp.float32))
+
+
+def _mse_scale(x: Array, cfg: QConfig, num_candidates: int = 80) -> QState:
+    """Grid-search the clip ratio minimising ||x - q(x)||^2 (paper's OMSE)."""
+    base = _minmax_scale(x, cfg)
+    ratios = jnp.linspace(0.35, 1.0, num_candidates)
+    axes = _reduce_axes(x, cfg)
+
+    def err_for(ratio):
+        st = QState(base.scale * ratio, base.zero_point)
+        err = quantize_dequant(x, st, cfg) - x
+        return jnp.sum(err * err, axis=axes, keepdims=True)
+
+    errs = jax.vmap(err_for)(ratios)  # (C, *scale_shape)
+    best = jnp.argmin(errs, axis=0)
+    ratio = ratios[best]
+    return QState(base.scale * ratio, base.zero_point)
+
+
+def init_qstate(x: Array, cfg: QConfig) -> QState:
+    """Initialise scales for tensor ``x`` under ``cfg``."""
+    if cfg.group_size is not None:
+        xg = _group_reshape(x, cfg)
+        # one scale per (group, out-channel): reduce over the group axis only
+        axes = (-2,)
+        if cfg.symmetric:
+            amax = jnp.max(jnp.abs(xg), axis=axes, keepdims=True)
+            scale = jnp.maximum(amax / cfg.qmax, 1e-8)
+            zp = jnp.zeros_like(scale)
+            st = QState(scale.astype(jnp.float32), zp.astype(jnp.float32))
+        else:
+            lo = jnp.min(xg, axis=axes, keepdims=True)
+            hi = jnp.max(xg, axis=axes, keepdims=True)
+            scale = jnp.maximum((hi - lo) / (cfg.qmax - cfg.qmin), 1e-8)
+            st = QState(scale.astype(jnp.float32), jnp.round(-lo / scale))
+        if cfg.scale_method == "mse":
+            ratios = jnp.linspace(0.35, 1.0, 80)
+
+            def err_for(ratio):
+                s2 = QState(st.scale * ratio, st.zero_point)
+                q = _qdq_raw(xg, s2, cfg)
+                return jnp.sum((q - xg) ** 2, axis=axes, keepdims=True)
+
+            errs = jax.vmap(err_for)(ratios)
+            ratio = ratios[jnp.argmin(errs, axis=0)]
+            st = QState(st.scale * ratio, st.zero_point)
+        return st
+    if cfg.scale_method == "mse":
+        return _mse_scale(x, cfg)
+    return _minmax_scale(x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+def _qdq_raw(x: Array, st: QState, cfg: QConfig) -> Array:
+    q = jnp.clip(jnp.round(x / st.scale) + st.zero_point, cfg.qmin, cfg.qmax)
+    return (q - st.zero_point) * st.scale
+
+
+def quantize_int(x: Array, st: QState, cfg: QConfig) -> Array:
+    """Return the integer codes (int8 container regardless of bits<=8)."""
+    if cfg.group_size is not None:
+        xg = _group_reshape(x, cfg)
+        q = jnp.clip(jnp.round(xg / st.scale) + st.zero_point, cfg.qmin, cfg.qmax)
+        return q.reshape(x.shape).astype(jnp.int8)
+    q = jnp.clip(jnp.round(x / st.scale) + st.zero_point, cfg.qmin, cfg.qmax)
+    return q.astype(jnp.int8)
+
+
+def dequantize_int(q: Array, st: QState, cfg: QConfig, shape=None) -> Array:
+    if cfg.group_size is not None:
+        qg = _group_reshape(q.astype(jnp.float32), cfg)
+        w = (qg - st.zero_point) * st.scale
+        return w.reshape(q.shape)
+    return (q.astype(jnp.float32) - st.zero_point) * st.scale
+
+
+def quantize_dequant(x: Array, st: QState, cfg: QConfig) -> Array:
+    """Fake-quantize (round-to-nearest). Used by RTN and scale search."""
+    if cfg.group_size is not None:
+        xg = _group_reshape(x, cfg)
+        return _qdq_raw(xg, st, cfg).reshape(x.shape)
+    return _qdq_raw(x, st, cfg)
+
+
+# STE variant for QAT baseline -------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_quant_ste(x: Array, st: QState, cfg: QConfig) -> Array:
+    return quantize_dequant(x, st, cfg)
+
+
+def _fq_fwd(x, st, cfg):
+    return quantize_dequant(x, st, cfg), (x, st)
+
+
+def _fq_bwd(cfg, res, g):
+    x, st = res
+    # straight-through inside the clip range, zero outside
+    if cfg.group_size is not None:
+        xg = _group_reshape(x, cfg)
+        lo = (cfg.qmin - st.zero_point) * st.scale
+        hi = (cfg.qmax - st.zero_point) * st.scale
+        mask = ((xg >= lo) & (xg <= hi)).reshape(x.shape)
+    else:
+        lo = (cfg.qmin - st.zero_point) * st.scale
+        hi = (cfg.qmax - st.zero_point) * st.scale
+        mask = (x >= lo) & (x <= hi)
+    return (g * mask, jax.tree.map(jnp.zeros_like, st))
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# packing (deployment format consumed by kernels/qmatmul)
+# ---------------------------------------------------------------------------
+
+
+def pack_int(q: Array, bits: int, axis: int = 0) -> Array:
+    """Pack sub-byte integer codes along ``axis`` into an int8 container.
+
+    int8 -> identity; int4 -> 2 values/byte; int2 -> 4 values/byte.
+    Values are stored offset-binary (code + 2^{b-1}) so unpacking is
+    mask/shift only.
+    """
+    if bits == 8:
+        return q.astype(jnp.int8)
+    per = 8 // bits
+    axis = axis % q.ndim
+    assert q.shape[axis] % per == 0, (q.shape, axis, bits)
+    off = (q.astype(jnp.int32) + 2 ** (bits - 1)).astype(jnp.uint8)
+    new_shape = (*q.shape[:axis], q.shape[axis] // per, per, *q.shape[axis + 1:])
+    off = off.reshape(new_shape)
+    out = jnp.zeros((*q.shape[:axis], q.shape[axis] // per, *q.shape[axis + 1:]),
+                    jnp.uint8)
+    for i in range(per):
+        out = out | (jnp.take(off, i, axis=axis + 1) << (bits * i))
+    return out.astype(jnp.int8)
+
+
+def unpack_int(p: Array, bits: int, rows: int, axis: int = 0) -> Array:
+    """Inverse of :func:`pack_int`: int8 codes with ``rows`` along ``axis``."""
+    if bits == 8:
+        return p.astype(jnp.int8)
+    per = 8 // bits
+    axis = axis % p.ndim
+    mask = (1 << bits) - 1
+    u = p.astype(jnp.uint8)
+    parts = [((u >> (bits * i)) & mask).astype(jnp.int32) - 2 ** (bits - 1)
+             for i in range(per)]
+    out = jnp.stack(parts, axis=axis + 1)
+    out = out.reshape(*p.shape[:axis], rows, *p.shape[axis + 1:])
+    return out.astype(jnp.int8)

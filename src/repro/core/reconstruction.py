@@ -1,0 +1,555 @@
+"""BRECQ block reconstruction engine (paper Alg. 1).
+
+Pipeline:
+  1. Enumerate quantizable weights by walking the model once.
+  2. Capture the FP activation stream and, with one backward pass per
+     calibration batch (epsilon trick), the diagonal Fisher at every
+     block output.
+  3. Partition blocks into reconstruction units: layer / block / stage /
+     net (Sec. 3.2). Units never cross the enc->dec boundary.
+  4. Per unit: optimize AdaRound logits (+ LSQ activation step sizes)
+     with Adam on the Fisher-weighted output MSE + beta-annealed rounding
+     regularizer. Inputs come from the *quantized* stream (error
+     propagates, as in the reference implementation); targets from the
+     FP stream.
+  5. Harden rounding, advance the quantized stream, continue.
+  6. Bake hard-quantized weights back into a params copy for serving.
+
+Execution here is python-level block-by-block (calibration happens on
+paper-scale models); training/serving use the scan-based forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.common import NO_QUANT, Ctx, QuantHook
+from ..optim import adam
+from . import adaround, lsq
+from .adaround import BetaSchedule
+from .hooks import AdaRoundHook, RecordingHook, RTNHook
+from .quantizer import QConfig, QState, init_qstate, quantize_dequant
+
+Array = jax.Array
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# model walker: python-level block-by-block execution
+# ---------------------------------------------------------------------------
+
+
+class Walker:
+    """Sequential (non-scan) execution of a model's block graph."""
+
+    def __init__(self, model):
+        self.model = model
+        self.encdec = hasattr(model, "enc_stack")
+        self.enc_n = self.model.enc_stack.n if self.encdec else 0
+
+    def blocks(self) -> list[tuple[Any, int]]:
+        if self.encdec:
+            stacks = [self.model.enc_stack, self.model.dec_stack]
+        else:
+            stacks = self.model.stacks
+        return [(s, i) for s in stacks for i in range(s.n)]
+
+    def block_path(self, bi: int) -> str:
+        stack, ri = self.blocks()[bi]
+        return f"{stack.name}.{ri}"
+
+    def stem(self, params, batch, quant=NO_QUANT):
+        """Activations entering block 0 (+ its ctx)."""
+        if self.encdec:
+            frames = batch["frames"]
+            B, S, _ = frames.shape
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            ctx = Ctx(cfg=self.model.cfg, positions=pos, quant=quant)
+            return frames + params["enc_pos"][:S], ctx
+        return self.model.begin(params, batch, quant)
+
+    def ctx_for(self, batch, bi: int, memory: Optional[Array], quant=NO_QUANT) -> Ctx:
+        """Ctx entering block ``bi`` given the stream's encoder memory."""
+        cfg = self.model.cfg
+        if self.encdec and bi >= self.enc_n:
+            tokens = batch["tokens"]
+            B, S = tokens.shape
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            ctx = Ctx(cfg=cfg, positions=pos, quant=quant)
+            ctx.extras["memory"] = memory
+            return ctx
+        if self.encdec:
+            frames = batch["frames"]
+            B, S, _ = frames.shape
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            return Ctx(cfg=cfg, positions=pos, quant=quant)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = Ctx(cfg=cfg, positions=pos, quant=quant)
+        if cfg.family == "vlm":
+            ctx.extras["memory"] = batch["patches"]
+        return ctx
+
+    def apply_block(self, params, bi: int, x, ctx, quant=NO_QUANT):
+        stack, ri = self.blocks()[bi]
+        p_i = jax.tree.map(lambda a: a[ri], params[stack.name])
+        ctx2 = dataclasses.replace(ctx, quant=quant, scope=self.block_path(bi))
+        y, _ = self.model.apply_block(ctx2, stack, p_i, x)
+        return y
+
+    def boundary_transition(self, params, batch, x, quant=NO_QUANT):
+        """enc output -> (memory, decoder stem x)."""
+        from ..models.transformer import _norm
+
+        memory = _norm(self.model.cfg, params["enc_norm"], x)
+        hook = quant if quant is not None else NO_QUANT
+        table = hook.weight("embed/table", params["embed"]["table"])
+        xdec = jnp.take(table, batch["tokens"], axis=0)
+        return memory, xdec
+
+    def run(self, params, batch, quant=NO_QUANT, eps: Optional[list] = None):
+        """Full forward block-by-block (used for eval & the Fisher pass)."""
+        x, ctx = self.stem(params, batch, quant)
+        memory = None
+        for bi in range(len(self.blocks())):
+            x = self.apply_block(params, bi, x, ctx, quant)
+            if eps is not None:
+                x = x + eps[bi]
+            if self.encdec and bi == self.enc_n - 1:
+                memory, x = self.boundary_transition(params, batch, x, quant)
+                ctx = self.ctx_for(batch, bi + 1, memory, quant)
+        return self.model.finish(params, x, ctx)
+
+    def loss(self, params, batch, quant=NO_QUANT, eps=None):
+        from ..models.common import softmax_xent
+
+        logits = self.run(params, batch, quant, eps)
+        tokens = batch["tokens"]
+        return softmax_xent(logits[:, :-1], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconConfig:
+    w_bits: int = 4
+    a_bits: Optional[int] = None  # None = weight-only
+    w_group: Optional[int] = None  # per-group quantization (beyond-paper)
+    scale_method: str = "mse"
+    iters: int = 800  # paper: 20k/block; CI uses less
+    calib_bs: int = 8
+    lr_v: float = 1e-3
+    lr_s: float = 4e-5
+    granularity: str = "block"  # layer | block | stage | net
+    n_stages: int = 4
+    use_fisher: bool = True
+    keep_embed_head_8bit: bool = True
+    lam: float = 0.01
+    beta: BetaSchedule = dataclasses.field(default_factory=BetaSchedule)
+    input_source: str = "quant"  # 'quant' | 'fp' | 'mix'
+    input_mix_prob: float = 0.5  # QDrop-style mixing (beyond paper)
+    per_layer_bits: Optional[dict] = None  # path -> bits (mixed precision)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class PTQResult:
+    params_q: Params
+    act_scales: dict  # path -> scalar ({} when a_bits is None)
+    qstates: dict  # path -> (QState, QConfig)
+    v: dict  # path -> rounding logits
+    stats: dict
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _concat_batches(batches: list[dict]) -> dict:
+    return {k: jnp.concatenate([b[k] for b in batches], 0) for k in batches[0]}
+
+
+def _slice_batch(batch: dict, idx) -> dict:
+    return {k: v[idx] for k, v in batch.items()}
+
+
+class _ValHook(QuantHook):
+    def __init__(self):
+        self.vals: dict[str, Array] = {}
+
+    def weight(self, path, w):
+        self.vals[path] = w
+        return w
+
+
+def enumerate_weights(model, params, batch) -> dict[str, Array]:
+    """path -> weight array for every quant-eligible weight."""
+    walker = Walker(model)
+    hook = _ValHook()
+    walker.run(params, batch, hook)
+    return hook.vals
+
+
+def _bits_for(rc: ReconConfig, path: str) -> int:
+    if rc.per_layer_bits and path in rc.per_layer_bits:
+        return rc.per_layer_bits[path]
+    return rc.w_bits
+
+
+def init_states(model, weights: dict[str, Array], rc: ReconConfig):
+    """Quantizer state for block weights + 8-bit embed/head handling."""
+    qstates: dict[str, tuple[QState, QConfig]] = {}
+    embed_head: dict[str, tuple[QState, QConfig]] = {}
+    for path, w in weights.items():
+        if path in ("embed/table", "head/w"):
+            if not rc.keep_embed_head_8bit:
+                continue
+            if path == "head/w" and model.cfg.tie_embeddings:
+                continue  # tied: baking the embed covers the head
+            cfg = QConfig(bits=8, channel_axis=-1, scale_method="mse")
+            embed_head[path] = (init_qstate(w, cfg), cfg)
+        else:
+            cfg = QConfig(bits=_bits_for(rc, path), channel_axis=-1,
+                          group_size=rc.w_group, scale_method=rc.scale_method)
+            qstates[path] = (init_qstate(w, cfg), cfg)
+    return qstates, embed_head
+
+
+def _partition(walker: Walker, rc: ReconConfig) -> list[list[int]]:
+    nb = len(walker.blocks())
+    if rc.granularity in ("layer", "block"):
+        return [[i] for i in range(nb)]
+    segs = _segments(walker)
+    if rc.granularity == "net":
+        return segs
+    if rc.granularity == "stage":
+        units = []
+        for seg in segs:
+            k = max(1, (len(seg) + rc.n_stages - 1) // rc.n_stages)
+            units += [seg[i:i + k] for i in range(0, len(seg), k)]
+        return units
+    raise ValueError(rc.granularity)
+
+
+def _segments(walker: Walker) -> list[list[int]]:
+    nb = len(walker.blocks())
+    if walker.encdec:
+        return [list(range(walker.enc_n)), list(range(walker.enc_n, nb))]
+    return [list(range(nb))]
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQResult:
+    """Run BRECQ calibration; returns hard-quantized params + act scales."""
+    t0 = time.time()
+    walker = Walker(model)
+    nb = len(walker.blocks())
+    calib = _concat_batches(calib_batches)
+    N = calib["tokens"].shape[0]
+    rng = np.random.default_rng(rc.seed)
+
+    probe = _slice_batch(calib, jnp.arange(1))
+    weights = enumerate_weights(model, params, probe)
+    qstates, embed_head = init_states(model, weights, rc)
+    q_stem_hook = RTNHook(embed_head)
+
+    # -- Fisher at every block output (FP model, eps trick) -------------------
+    fisher: list[Optional[Array]] = [None] * nb
+    if rc.use_fisher and rc.granularity != "layer":
+        grad_fn = jax.jit(lambda eps, b: jax.grad(
+            lambda e: walker.loss(params, b, eps=e))(eps))
+        parts: list[list[Array]] = [[] for _ in range(nb)]
+        for b in calib_batches:
+            eps = _zero_eps(walker, params, b)
+            grads = grad_fn(eps, b)
+            for bi, g in enumerate(grads):
+                parts[bi].append(g.astype(jnp.float32) ** 2)
+        fisher = [jnp.concatenate(p, 0) for p in parts]
+        fisher = [f / jnp.maximum(jnp.mean(f), 1e-20) for f in fisher]
+
+    # -- streams ------------------------------------------------------------------
+    x_fp = jax.jit(lambda b: walker.stem(params, b)[0])(calib)
+    x_q = jax.jit(lambda b: walker.stem(params, b, q_stem_hook)[0])(calib)
+    mem_fp: Optional[Array] = None
+    mem_q: Optional[Array] = None
+
+    units = _partition(walker, rc)
+    v_all: dict[str, Array] = {}
+    s_all: dict[str, Array] = {}
+    stats = {"units": [], "granularity": rc.granularity}
+
+    for unit in units:
+        if rc.granularity == "layer":
+            x_fp, x_q, v_u, s_u, ustat = _reconstruct_layerwise(
+                model, walker, params, weights, calib, unit[0], x_fp, x_q,
+                mem_fp, mem_q, qstates, rc, rng)
+        else:
+            x_fp, x_q, v_u, s_u, ustat = _reconstruct_unit(
+                model, walker, params, weights, calib, unit, x_fp, x_q,
+                mem_fp, mem_q, fisher, qstates, rc, rng)
+        v_all.update(v_u)
+        s_all.update(s_u)
+        stats["units"].append(ustat)
+        # enc->dec boundary transition between units
+        if walker.encdec and max(unit) == walker.enc_n - 1:
+            mem_fp, x_fp = walker.boundary_transition(params, calib, x_fp)
+            mem_q, x_q = walker.boundary_transition(params, calib, x_q, q_stem_hook)
+
+    params_q = bake(model, params, qstates, v_all, embed_head)
+    stats.update(wall_s=time.time() - t0, n_units=len(units),
+                 n_weights=len(qstates))
+    all_states = dict(qstates)
+    all_states.update(embed_head)
+    return PTQResult(params_q=params_q, act_scales=s_all, qstates=all_states,
+                     v=v_all, stats=stats)
+
+
+def _zero_eps(walker, params, batch):
+    x, ctx = walker.stem(params, batch)
+    eps = []
+    for bi in range(len(walker.blocks())):
+        eps.append(jnp.zeros_like(x))
+        x = walker.apply_block(params, bi, x, ctx)
+        if walker.encdec and bi == walker.enc_n - 1:
+            _, x = walker.boundary_transition(params, batch, x)
+            ctx = walker.ctx_for(batch, bi + 1, None)
+    return eps
+
+
+def _apply_unit(walker, params, unit, hook, x, batch, memory):
+    """Run the unit's contiguous blocks under ``hook``."""
+    ctx = walker.ctx_for(batch, min(unit), memory)
+    for bi in sorted(unit):
+        x = walker.apply_block(params, bi, x, ctx, hook)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# block / stage / net units
+# ---------------------------------------------------------------------------
+
+
+def _reconstruct_unit(model, walker, params, weights, calib, unit, x_fp, x_q,
+                      mem_fp, mem_q, fisher, qstates, rc: ReconConfig, rng):
+    t0 = time.time()
+    N = calib["tokens"].shape[0]
+
+    # which paths does this unit touch?
+    rec = RecordingHook(capture_acts=True)
+    _ = _apply_unit(walker, params, unit, rec, x_q[:1], _slice_batch(calib, jnp.arange(1)), _m1(mem_q))
+    wpaths = [p for p in rec.weights if p in qstates]
+
+    fp_fn = jax.jit(lambda x, b, m: _apply_unit(walker, params, unit, NO_QUANT, x, b, m))
+    z_fp = fp_fn(x_fp, calib, mem_fp)
+    g2 = fisher[max(unit)] if rc.use_fisher else None
+
+    if not wpaths:
+        hard0 = jax.jit(lambda x, b, m: _apply_unit(walker, params, unit, NO_QUANT, x, b, m))
+        return z_fp, hard0(x_q, calib, mem_q), {}, {}, {"unit": unit, "skipped": True}
+
+    v0 = {p: adaround.init_v(weights[p], *qstates[p]) for p in wpaths}
+    s0 = {}
+    if rc.a_bits is not None:
+        for p, a in rec.acts.items():
+            s0[p] = lsq.init_act_scale(a, rc.a_bits, symmetric=True)
+    opt = {"v": v0, "s": s0}
+    lr_tree = {"v": {p: 1.0 for p in v0}, "s": {p: rc.lr_s / rc.lr_v for p in s0}}
+    nelem = sum(v.size for v in v0.values())
+
+    def unit_loss(opt, xin, zt, g2b, batch, mem, it):
+        hook = AdaRoundHook(qstates, opt, rc.a_bits, soft=True)
+        x = _apply_unit(walker, params, unit, hook, xin, batch, mem)
+        err = (x - zt).astype(jnp.float32) ** 2
+        if g2b is not None:
+            err = err * g2b
+        beta, enabled = rc.beta(it, rc.iters)
+        reg = sum(adaround.round_reg(v, beta) for v in opt["v"].values())
+        return jnp.mean(err) + rc.lam * enabled * reg / nelem
+
+    grad_fn = jax.jit(jax.value_and_grad(unit_loss))
+    acfg = adam.AdamConfig(lr=rc.lr_v)
+    ostate = adam.init(opt)
+    step_fn = jax.jit(lambda o, s, g: adam.update(acfg, g, s, o, lr_tree))
+
+    losses = []
+    for it in range(rc.iters):
+        idx = jnp.asarray(rng.choice(N, size=min(rc.calib_bs, N), replace=False))
+        if rc.input_source == "fp":
+            xin = x_fp[idx]
+        elif rc.input_source == "mix":
+            m = jnp.asarray(rng.random(len(idx)) < rc.input_mix_prob)
+            xin = jnp.where(m[:, None, None], x_fp[idx], x_q[idx])
+        else:
+            xin = x_q[idx]
+        g2b = g2[idx] if g2 is not None else None
+        l, grads = grad_fn(opt, xin, z_fp[idx], g2b, _slice_batch(calib, idx),
+                           _m1(mem_q, idx), jnp.asarray(it, jnp.float32))
+        opt, ostate = step_fn(opt, ostate, grads)
+        losses.append(float(l))
+
+    hard_fn = jax.jit(lambda o, x, b, m: _apply_unit(
+        walker, params, unit, AdaRoundHook(qstates, o, rc.a_bits, soft=False), x, b, m))
+    x_q2 = hard_fn(opt, x_q, calib, mem_q)
+    stat = {"unit": list(unit), "paths": len(wpaths), "iters": rc.iters,
+            "loss_first": losses[0], "loss_last": losses[-1],
+            "final_recon_mse": float(jnp.mean((x_q2 - z_fp).astype(jnp.float32) ** 2)),
+            "wall_s": time.time() - t0}
+    return z_fp, x_q2, opt["v"], opt["s"], stat
+
+
+def _m1(mem, idx=None):
+    if mem is None:
+        return None
+    return mem[idx] if idx is not None else mem
+
+
+# ---------------------------------------------------------------------------
+# layer-wise units (AdaRound baseline: per-linear MSE, no Fisher)
+# ---------------------------------------------------------------------------
+
+
+class _LayerHook(QuantHook):
+    """Hard-quantizes finished paths; captures the input of one target."""
+
+    def __init__(self, qstates, v_done: dict, target: Optional[str],
+                 act_scales: Optional[dict] = None, a_bits: Optional[int] = None):
+        self.qstates = qstates
+        self.v_done = v_done
+        self.target = target
+        self.captured: Optional[Array] = None
+        self.act_scales = act_scales or {}
+        self.a_bits = a_bits
+
+    def weight(self, path, w):
+        if path in self.v_done:
+            st, cfg = self.qstates[path]
+            return adaround.hard_quant(w, self.v_done[path], st, cfg)
+        return w
+
+    def act(self, path, x):
+        if self.a_bits is not None and path in self.act_scales:
+            x = lsq.lsq_quant(x, self.act_scales[path], self.a_bits, True)
+        if path == self.target:
+            self.captured = x
+        return x
+
+
+def _reconstruct_layerwise(model, walker, params, weights, calib, bi, x_fp, x_q,
+                           mem_fp, mem_q, qstates, rc: ReconConfig, rng):
+    """AdaRound-style: each linear reconstructs its own output z = x W."""
+    t0 = time.time()
+    N = calib["tokens"].shape[0]
+    rec = RecordingHook(capture_acts=True)
+    _ = _apply_unit(walker, params, [bi], rec, x_q[:1], _slice_batch(calib, jnp.arange(1)), _m1(mem_q))
+    wpaths = [p for p in rec.weights if p in qstates]
+
+    fp_fn = jax.jit(lambda x, b, m: _apply_unit(walker, params, [bi], NO_QUANT, x, b, m))
+    z_fp = fp_fn(x_fp, calib, mem_fp)
+
+    v_done: dict[str, Array] = {}
+    s_done: dict[str, Array] = {}
+    acfg = adam.AdamConfig(lr=rc.lr_v)
+
+    for path in wpaths:
+        W = weights[path]
+        st, qc = qstates[path]
+
+        # capture this linear's inputs on both streams
+        xin_q = jax.jit(lambda x, m: _cap(walker, params, bi, qstates, v_done,
+                                          s_done, rc, path, x, calib, m))(x_q, mem_q)
+        xin_fp = jax.jit(lambda x, m: _cap(walker, params, bi, qstates, {},
+                                           {}, dataclasses.replace(rc, a_bits=None),
+                                           path, x, calib, m))(x_fp, mem_fp)
+        zt = jnp.matmul(xin_fp, W.astype(xin_fp.dtype))
+        if rc.a_bits is not None:
+            s_done[path] = lsq.init_act_scale(xin_q, rc.a_bits, symmetric=True)
+        v = adaround.init_v(W, st, qc)
+        opt = {"v": {path: v}, "s": ({path: s_done[path]} if rc.a_bits else {})}
+        ostate = adam.init(opt)
+        lr_tree = {"v": {path: 1.0}, "s": {path: rc.lr_s / rc.lr_v} if rc.a_bits else {}}
+
+        def layer_loss(opt, xb, zb, it):
+            w_q = adaround.soft_quant(W, opt["v"][path], st, qc)
+            x = xb
+            if rc.a_bits is not None:
+                x = lsq.lsq_quant(x, opt["s"][path], rc.a_bits, True)
+            z = jnp.matmul(x, w_q.astype(x.dtype))
+            beta, enabled = rc.beta(it, rc.iters)
+            reg = adaround.round_reg(opt["v"][path], beta)
+            return (jnp.mean((z - zb).astype(jnp.float32) ** 2)
+                    + rc.lam * enabled * reg / v.size)
+
+        grad_fn = jax.jit(jax.value_and_grad(layer_loss))
+        step_fn = jax.jit(lambda o, s, g: adam.update(acfg, g, s, o, lr_tree))
+        lead = xin_q.shape[0]
+        for it in range(rc.iters):
+            idx = jnp.asarray(rng.choice(lead, size=min(rc.calib_bs, lead), replace=False))
+            _, grads = grad_fn(opt, xin_q[idx], zt[idx], jnp.asarray(it, jnp.float32))
+            opt, ostate = step_fn(opt, ostate, grads)
+        v_done[path] = opt["v"][path]
+        if rc.a_bits is not None:
+            s_done[path] = opt["s"][path]
+
+    hard_hook = _LayerHook(qstates, v_done, None, s_done, rc.a_bits)
+    x_q2 = jax.jit(lambda x, m: _apply_unit(walker, params, [bi], hard_hook, x, calib, m))(x_q, mem_q)
+    stat = {"unit": [bi], "paths": len(wpaths), "iters": rc.iters,
+            "final_recon_mse": float(jnp.mean((x_q2 - z_fp).astype(jnp.float32) ** 2)),
+            "wall_s": time.time() - t0}
+    return z_fp, x_q2, v_done, s_done, stat
+
+
+def _cap(walker, params, bi, qstates, v_done, s_done, rc, path, x, calib, mem):
+    hook = _LayerHook(qstates, v_done, path, s_done, rc.a_bits)
+    _apply_unit(walker, params, [bi], hook, x, calib, mem)
+    return hook.captured
+
+
+# ---------------------------------------------------------------------------
+# baking
+# ---------------------------------------------------------------------------
+
+
+def bake(model, params, qstates, v_all, embed_head) -> Params:
+    """Write hard-quantized weights back into a params copy."""
+    params_q = jax.tree.map(lambda x: x, params)
+
+    def set_leaf(path: str, fn):
+        parts = path.split("/")
+        if "." in parts[0]:
+            sname, ri = parts[0].rsplit(".", 1)
+            ri = int(ri)
+            keys = parts[1:] + ["w"]
+            node = params_q[sname]
+            for k in keys[:-1]:
+                node = node[k]
+            leaf = node[keys[-1]]
+            node[keys[-1]] = leaf.at[ri].set(fn(leaf[ri]))
+        else:
+            node = params_q
+            for k in parts[:-1]:
+                node = node[k]
+            node[parts[-1]] = fn(node[parts[-1]])
+
+    for path, (st, cfg) in qstates.items():
+        if path in v_all:
+            v = v_all[path]
+            set_leaf(path, lambda w, v=v, st=st, cfg=cfg: adaround.hard_quant(w, v, st, cfg))
+        else:
+            set_leaf(path, lambda w, st=st, cfg=cfg: quantize_dequant(w, st, cfg))
+    for path, (st, cfg) in embed_head.items():
+        set_leaf(path, lambda w, st=st, cfg=cfg: quantize_dequant(w, st, cfg))
+    return params_q

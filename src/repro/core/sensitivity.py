@@ -1,0 +1,138 @@
+"""Layer sensitivities for mixed precision (paper Sec. 3.4).
+
+After the three unified-precision calibrations (2/4/8-bit), measure per
+layer the Fisher-weighted block-output error when ONLY that layer is
+quantized (diagonal term), and — at 2-bit — the pairwise interaction
+inside each block (off-diagonal term):
+
+    offdiag(l1, l2) = joint(l1, l2) - diag(l1) - diag(l2).
+
+Everything is stored in a lookup table; the genetic search then never
+touches the network again (paper: "mixed-precision training only needs
+to check the lookup table").
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import NO_QUANT, QuantHook
+from . import adaround
+from .reconstruction import (PTQResult, ReconConfig, Walker, _apply_unit,
+                             _concat_batches, _slice_batch)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SensTable:
+    diag: dict[tuple[str, int], float]  # (path, bits) -> loss
+    offdiag: dict[tuple[str, str], float]  # (p1, p2) both 2-bit -> interaction
+    block_of: dict[str, int]  # path -> block index
+    shapes: dict[str, tuple]  # path -> weight shape
+
+
+class _SelectHook(QuantHook):
+    """Hard-quantize only the selected paths, using calibrated rounding."""
+
+    def __init__(self, results: dict[int, PTQResult], select: dict[str, int]):
+        self.results = results
+        self.select = select
+
+    def weight(self, path, w):
+        bits = self.select.get(path)
+        if bits is None:
+            return w
+        res = self.results[bits]
+        if path in res.v:
+            st, cfg = res.qstates[path]
+            return adaround.hard_quant(w, res.v[path], st, cfg)
+        if path in res.qstates:
+            from .quantizer import quantize_dequant
+
+            st, cfg = res.qstates[path]
+            return quantize_dequant(w, st, cfg)
+        return w
+
+
+def measure(model, params, calib_batches, results: dict[int, PTQResult],
+            bits_options=(2, 4, 8), n_samples: int = 32,
+            use_fisher: bool = True, pair_bits: int = 2) -> SensTable:
+    """Build the sensitivity lookup table."""
+    walker = Walker(model)
+    calib = _concat_batches(calib_batches)
+    sub = _slice_batch(calib, jnp.arange(min(n_samples, calib["tokens"].shape[0])))
+
+    # fisher at block outputs (reuse the eps trick on the subset)
+    nb = len(walker.blocks())
+    fisher = [None] * nb
+    if use_fisher:
+        eps = _zero_eps_sub(walker, params, sub)
+        grads = jax.jit(lambda e, b: jax.grad(
+            lambda ee: walker.loss(params, b, eps=ee))(e))(eps, sub)
+        fisher = [g.astype(jnp.float32) ** 2 for g in grads]
+        fisher = [f / jnp.maximum(jnp.mean(f), 1e-20) for f in fisher]
+
+    # paths per block (from any result's qstates, grouped by prefix)
+    any_res = results[min(results)]
+    block_paths: dict[int, list[str]] = {i: [] for i in range(nb)}
+    block_of: dict[str, int] = {}
+    for bi in range(nb):
+        prefix = walker.block_path(bi) + "/"
+        for p in any_res.qstates:
+            if p.startswith(prefix):
+                block_paths[bi].append(p)
+                block_of[p] = bi
+
+    shapes = {}
+    from .reconstruction import enumerate_weights
+
+    weights = enumerate_weights(model, params, _slice_batch(calib, jnp.arange(1)))
+    for p in block_of:
+        shapes[p] = tuple(weights[p].shape)
+
+    diag: dict[tuple[str, int], float] = {}
+    offdiag: dict[tuple[str, str], float] = {}
+
+    # FP stream through blocks on the subset
+    x_fp = jax.jit(lambda b: walker.stem(params, b)[0])(sub)
+    mem_fp = None
+
+    for bi in range(nb):
+        z_fp = jax.jit(lambda x, m: _apply_unit(
+            walker, params, [bi], NO_QUANT, x, sub, m))(x_fp, mem_fp)
+        g2 = fisher[bi]
+
+        def unit_err(select: dict[str, int]) -> float:
+            hook = _SelectHook(results, select)
+            z = _apply_unit(walker, params, [bi], hook, x_fp, sub, mem_fp)
+            err = (z - z_fp).astype(jnp.float32) ** 2
+            if g2 is not None:
+                err = err * g2
+            return float(jnp.mean(err))
+
+        err_fn = unit_err  # dict-keyed selection: retrace per call is fine here
+
+        for p in block_paths[bi]:
+            for b in bits_options:
+                if b in results:
+                    diag[(p, b)] = err_fn({p: b})
+        for p1, p2 in itertools.combinations(block_paths[bi], 2):
+            joint = err_fn({p1: pair_bits, p2: pair_bits})
+            offdiag[(p1, p2)] = joint - diag[(p1, pair_bits)] - diag[(p2, pair_bits)]
+
+        x_fp = z_fp
+        if walker.encdec and bi == walker.enc_n - 1:
+            mem_fp, x_fp = walker.boundary_transition(params, sub, x_fp)
+
+    return SensTable(diag=diag, offdiag=offdiag, block_of=block_of, shapes=shapes)
+
+
+def _zero_eps_sub(walker, params, batch):
+    from .reconstruction import _zero_eps
+
+    return _zero_eps(walker, params, batch)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the quantized deployment path.
+
+Each kernel lives in its own subpackage:
+  qmatmul/   packed int2/int4/int8 weight dequant-matmul (the serving GEMM)
+  kvattn/    decode attention over an int8-quantized KV cache
+  fakequant/ fused AdaRound forward (calibration hot loop)
+
+Layout per subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper with interpret/XLA fallbacks), ref.py (pure-jnp
+oracle used by the allclose sweeps in tests/).
+"""

@@ -1,0 +1,57 @@
+"""Fused AdaRound forward (Pallas TPU).
+
+The elementwise hot loop of BRECQ calibration: soft/hard rounding of a
+weight tile entirely in VMEM — floor, rectified sigmoid, clip, rescale
+in one pass instead of five XLA HLOs (one read + one write of W per
+step instead of several temporaries).
+
+Tiling: (bk, bn) weight/logit tiles with a broadcast (1, bn) scale row
+(per-output-channel scales).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ZETA, GAMMA = 1.1, -0.1
+
+
+def _fq_kernel(w_ref, v_ref, s_ref, o_ref, *, qmin, qmax, hard):
+    w = w_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    if hard:
+        h = (v >= 0).astype(jnp.float32)
+    else:
+        h = jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+    q = jnp.clip(jnp.floor(w / s) + h, qmin, qmax)
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "hard", "bk",
+                                             "bn", "interpret"))
+def fakequant(w: jax.Array, v: jax.Array, scale: jax.Array, *, qmin: int,
+              qmax: int, hard: bool = False, bk: int = 256, bn: int = 256,
+              interpret: bool = True) -> jax.Array:
+    """w, v: (K, N); scale: (1, N) or (K, N). AdaRound fake-quant."""
+    K, N = w.shape
+    bk = min(bk, K)
+    bn = min(bn, N)
+    assert K % bk == 0 and N % bn == 0, (K, bk, N, bn)
+    per_row = scale.shape[0] != 1
+    return pl.pallas_call(
+        functools.partial(_fq_kernel, qmin=qmin, qmax=qmax, hard=hard),
+        grid=(K // bk, N // bn),
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk if per_row else 1, bn),
+                         (lambda i, j: (i, j)) if per_row else (lambda i, j: (0, j))),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, N), w.dtype),
+        interpret=interpret,
+    )(w, v, scale)

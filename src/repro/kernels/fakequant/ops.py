@@ -1,0 +1,26 @@
+"""Public wrapper for the fused AdaRound forward."""
+from __future__ import annotations
+
+import jax
+
+from ...core.quantizer import QConfig, QState
+from .kernel import fakequant
+from .ref import fakequant_ref
+
+
+def adaround_forward(w: jax.Array, v: jax.Array, st: QState, cfg: QConfig,
+                     *, hard: bool = False, backend: str = "auto") -> jax.Array:
+    """Kernel-backed equivalent of core.adaround.soft/hard_quant for 2-D
+    per-channel weights (symmetric, no grouping)."""
+    assert w.ndim == 2 and cfg.group_size is None and cfg.symmetric
+    scale = st.scale.reshape(-1, w.shape[1])
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        return fakequant_ref(w, v, scale, cfg.qmin, cfg.qmax, hard)
+    interpret = jax.default_backend() != "tpu"
+    K, N = w.shape
+    bk = 256 if K % 256 == 0 else (8 if K % 8 == 0 else 1)
+    bn = 256 if N % 256 == 0 else (128 if N % 128 == 0 else N)
+    return fakequant(w, v, scale, qmin=cfg.qmin, qmax=cfg.qmax, hard=hard,
+                     bk=bk, bn=bn, interpret=interpret)

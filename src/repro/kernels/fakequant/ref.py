@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused AdaRound forward."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ZETA, GAMMA = 1.1, -0.1
+
+
+def fakequant_ref(w: jax.Array, v: jax.Array, scale: jax.Array,
+                  qmin: int, qmax: int, hard: bool) -> jax.Array:
+    """w, v: (K, N); scale: (1|K, N) broadcastable. AdaRound forward."""
+    if hard:
+        h = (v >= 0).astype(jnp.float32)
+    else:
+        h = jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+    q = jnp.clip(jnp.floor(w / scale) + h, qmin, qmax)
+    return (q * scale).astype(w.dtype)

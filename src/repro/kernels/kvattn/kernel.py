@@ -1,0 +1,109 @@
+"""Decode attention over an int8-quantized KV cache (Pallas TPU).
+
+The decode-time hot loop for quantized serving: the KV cache is stored
+int8 with per-(token, kv-head) scales (produced by the same uniform
+quantizer as the weights), halving cache bytes vs bf16 — decode is
+memory-bound, so this directly moves the §Roofline memory term.
+
+Schedule: grid (B, K, S/bs). For each (batch, kv-head) the GQA query
+group (G = H/K rows) stays resident in VMEM while S streams through in
+(bs, hd) int8 tiles; dequant + online softmax accumulate in f32 scratch.
+
+VMEM per step (defaults bs=512, hd<=256, G<=16):
+  q group (G, hd) f32, k/v tiles (bs, hd) int8, scales (bs,) f32,
+  m/l (G,) and acc (G, hd) f32 scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+MASK = -1e30
+
+
+def _kv_kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
+               o_ref, m_ref, l_ref, acc_ref, *, ns: int, window, hd: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]  # (bs, hd)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) / (hd ** 0.5)  # (G, bs)
+    kp = kpos_ref[0]  # (bs,)
+    cur = cur_ref[0]
+    valid = (kp >= 0) & (kp <= cur)
+    if window is not None:
+        valid = valid & (cur - kp < window)
+    scores = jnp.where(valid[None, :], scores, MASK)
+
+    m_prev = m_ref[:, 0]  # (G,)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    p = jnp.exp(scores - m_new[:, None])  # (G, bs)
+    corr = jnp.exp(m_prev - m_new)
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]  # (bs, hd)
+    l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(s == ns - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bs", "interpret"))
+def kv_decode(q: Array, k8: Array, v8: Array, kscale: Array, vscale: Array,
+              kpos: Array, cur_pos: Array, *, window=None, bs: int = 512,
+              interpret: bool = True) -> Array:
+    """q (B,H,hd); k8/v8 (B,S,K,hd) int8; scales (B,S,K); kpos (B,S) int32;
+    cur_pos (B,) int32. Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    S, K = k8.shape[1], k8.shape[2]
+    G = H // K
+    bs = min(bs, S)
+    assert S % bs == 0, (S, bs)
+    ns = S // bs
+
+    # regroup: (B, K, G, hd) query groups; (B, K, S, hd) caches
+    qg = q.reshape(B, K, G, hd)
+    kt = k8.transpose(0, 2, 1, 3)  # (B,K,S,hd)
+    vt = v8.transpose(0, 2, 1, 3)
+    kst = kscale.transpose(0, 2, 1)  # (B,K,S)
+    vst = vscale.transpose(0, 2, 1)
+
+    grid = (B, K, ns)
+    out = pl.pallas_call(
+        functools.partial(_kv_kernel, ns=ns, window=window, hd=hd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, s: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, k, s: (b, k, s, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, k, s: (b, k, s, 0)),
+            pl.BlockSpec((1, 1, bs), lambda b, k, s: (b, k, s)),
+            pl.BlockSpec((1, 1, bs), lambda b, k, s: (b, k, s)),
+            pl.BlockSpec((1, bs), lambda b, k, s: (b, s)),
+            pl.BlockSpec((1,), lambda b, k, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, k, s: (b, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt, kst, vst, kpos, cur_pos)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,39 @@
+"""Public wrapper for int8-KV decode attention + cache quantization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import kv_decode
+from .ref import kv_decode_ref
+
+Array = jax.Array
+
+
+def quantize_kv(k: Array, v: Array) -> tuple[Array, Array, Array, Array]:
+    """bf16 (B,S,K,hd) caches -> int8 codes + per-(token, head) scales."""
+    def q(x):
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+        scale = jnp.maximum(amax / 127.0, 1e-8)
+        codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                         -128, 127).astype(jnp.int8)
+        return codes, scale
+
+    k8, ks = q(k)
+    v8, vs = q(v)
+    return k8, v8, ks, vs
+
+
+def attend_int8(q: Array, k8: Array, v8: Array, kscale: Array, vscale: Array,
+                kpos: Array, cur_pos: Array, *, window=None,
+                backend: str = "auto") -> Array:
+    """Decode attention over the quantized cache. q: (B,H,hd)."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        return kv_decode_ref(q, k8, v8, kscale, vscale, kpos, cur_pos, window)
+    interpret = jax.default_backend() != "tpu"
+    S = k8.shape[1]
+    bs = 512 if S % 512 == 0 else (128 if S % 128 == 0 else S)
+    return kv_decode(q, k8, v8, kscale, vscale, kpos, cur_pos,
+                     window=window, bs=bs, interpret=interpret)

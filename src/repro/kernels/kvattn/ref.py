@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for int8-KV decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+MASK = -1e30
+
+
+def kv_decode_ref(q: Array, k8: Array, v8: Array, kscale: Array,
+                  vscale: Array, kpos: Array, cur_pos: Array,
+                  window=None) -> Array:
+    """q: (B,H,hd); k8/v8: (B,S,K,hd) int8; scales (B,S,K); kpos (B,S);
+    cur_pos (B,). GQA via H % K == 0. Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    S, K = k8.shape[1], k8.shape[2]
+    rep = H // K
+    k = k8.astype(jnp.float32) * kscale[..., None]
+    v = v8.astype(jnp.float32) * vscale[..., None]
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) / jnp.sqrt(hd)
+    valid = (kpos >= 0) & (kpos <= cur_pos[:, None])
+    if window is not None:
+        valid = valid & (cur_pos[:, None] - kpos < window)
+    s = jnp.where(valid[:, None, :], s, MASK)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v).astype(q.dtype)

@@ -1,0 +1,92 @@
+"""Packed-int weight dequant-matmul Pallas TPU kernel.
+
+The serving GEMM for BRECQ-quantized models: weights live in HBM as
+packed int2/int4/int8 codes (offset-binary, packed along the reduction
+axis) with per-group scales; the kernel streams (bk, bn) weight tiles
+into VMEM, unpacks + dequantizes in-register, and accumulates on the MXU
+in f32.
+
+Tiling (VMEM working set per step, defaults bm=bn=128, bk=group):
+  x tile      (bm, bk)            bf16/f32
+  w tile      (bk/per, bn) int8   <- 8/bits codes per byte
+  scale tile  (1, bn)             one group per k-step (bk == group_size)
+  acc scratch (bm, bn) f32
+
+Constraint: group_size == bk (one scale row per k-tile), or per-channel
+scales (scales shape (1, N)). MXU dims stay multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _unpack_tile(wp: Array, bits: int) -> Array:
+    """(bk/per, bn) int8 -> (bk, bn) f32 centred codes."""
+    if bits == 8:
+        return wp.astype(jnp.float32)
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    u = wp.astype(jnp.int32) & 0xFF  # unsigned view
+    parts = [((u >> (bits * i)) & mask) - 2 ** (bits - 1) for i in range(per)]
+    stacked = jnp.stack(parts, axis=1)  # (bk/per, per, bn)
+    return stacked.reshape(wp.shape[0] * per, wp.shape[1]).astype(jnp.float32)
+
+
+def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = _unpack_tile(w_ref[...], bits)  # (bk, bn)
+    w = codes * s_ref[...].astype(jnp.float32)  # scale row broadcasts
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.float32), w,
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "interpret"))
+def qmatmul(x: Array, w_packed: Array, scales: Array, *, bits: int,
+            bm: int = 128, bn: int = 128, interpret: bool = True) -> Array:
+    """x (M, K) @ dequant(w_packed (K/per, N), scales (K/G, N)) -> (M, N)."""
+    per = 8 // bits
+    M, K = x.shape
+    N = w_packed.shape[1]
+    G = scales.shape[0]
+    assert w_packed.shape[0] * per == K, (w_packed.shape, K, bits)
+    if G == 1:
+        bk = min(K, 512)
+    else:
+        bk = K // G  # one scale group per k-step
+    assert K % bk == 0 and bk % per == 0, (K, bk, per)
+    nk = K // bk
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0, (M, bm, N, bn)
+
+    grid = (M // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_qmatmul_kernel, bits=bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // per, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k if G > 1 else 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed, scales)

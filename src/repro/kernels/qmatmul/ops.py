@@ -1,0 +1,61 @@
+"""Public jit'd wrapper for the packed dequant-matmul.
+
+``qmm(x, qw)`` consumes a :class:`QuantizedLinear` produced from BRECQ
+output (pack_weights). On CPU this runs the Pallas kernel in interpret
+mode (correctness) or the XLA reference (speed); on TPU it compiles the
+Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ...core.quantizer import pack_int
+from .kernel import qmatmul
+from .ref import qmatmul_ref
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedLinear:
+    """Deployment weight format: packed codes + per-group scales."""
+
+    packed: Array  # (K * bits/8, N) int8
+    scales: Array  # (K/G, N) f32
+    bits: int
+    k: int  # original reduction dim
+
+    def tree_flatten(self):
+        return (self.packed, self.scales), (self.bits, self.k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], leaves[1], *aux)
+
+
+def pack_weights(codes: Array, scales, bits: int) -> QuantizedLinear:
+    """codes: (K, N) int8 in [-2^{b-1}, 2^{b-1}-1]; scales broadcastable."""
+    k, n = codes.shape
+    scales = jnp.asarray(scales, jnp.float32).reshape(-1, n)
+    return QuantizedLinear(pack_int(codes, bits), scales, bits, k)
+
+
+def qmm(x: Array, qw: QuantizedLinear, *, backend: str = "auto") -> Array:
+    """x: (..., K) -> (..., N)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, qw.k)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        out = qmatmul_ref(x2, qw.packed, qw.scales, qw.bits)
+    else:
+        interpret = jax.default_backend() != "tpu"
+        m = x2.shape[0]
+        bm = 128 if m % 128 == 0 else (8 if m % 8 == 0 else 1)
+        out = qmatmul(x2, qw.packed, qw.scales, bits=qw.bits, bm=bm,
+                      interpret=interpret)
+    return out.reshape(*lead, -1)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the packed dequant-matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.quantizer import unpack_int
+
+Array = jax.Array
+
+
+def dequant(w_packed: Array, scales: Array, bits: int, k: int) -> Array:
+    """(K/per, N) packed int8 + (K/G, N) scales -> (K, N) float weights."""
+    codes = unpack_int(w_packed, bits, k).astype(jnp.float32)  # (K, N)
+    g = k // scales.shape[0]
+    codes = codes.reshape(scales.shape[0], g, -1) * scales[:, None, :]
+    return codes.reshape(k, -1)
+
+
+def qmatmul_ref(x: Array, w_packed: Array, scales: Array, bits: int) -> Array:
+    """x: (M, K); w_packed: (K*bits/8, N) int8; scales: (K/G, N)."""
+    per = 8 // bits
+    k = w_packed.shape[0] * per
+    w = dequant(w_packed, scales, bits, k)
+    return jnp.dot(x.astype(jnp.float32), w).astype(x.dtype)

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder devices.
+
+Per cell this emits artifacts/dryrun/<arch>_<shape>_<mesh>[_tag].json:
+  * compiled.memory_analysis()  (proves per-chip fit)
+  * compiled.cost_analysis()    (XLA's own flops/bytes; while-body-once)
+  * while-aware HLO totals      (flops / bytes / collective bytes+counts)
+  * roofline terms + bottleneck (analysis/roofline.py)
+
+``--all`` runs every applicable cell in a subprocess each (compile-memory
+isolation; one bad cell cannot take down the sweep).
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", type=str, default=None)
+    p.add_argument("--shape", type=str, default=None)
+    p.add_argument("--mesh", choices=["single", "multi"], default="single")
+    p.add_argument("--strategy", choices=["auto", "dp", "tp", "fsdp"], default="auto")
+    p.add_argument("--quant", type=int, default=None, choices=[2, 4, 8],
+                   help="serve with packed int weights at this bit-width")
+    p.add_argument("--group", type=int, default=None, help="weight group size")
+    p.add_argument("--remat", default="full", choices=["none", "dots", "full"])
+    p.add_argument("--moe-impl", default=None, choices=["dense", "capacity"])
+    p.add_argument("--fsdp-axis", default="data")
+    p.add_argument("--no-shard-experts", action="store_true")
+    p.add_argument("--tag", default="", help="suffix for the artifact name")
+    p.add_argument("--out", default="artifacts/dryrun")
+    p.add_argument("--all", action="store_true", help="run every cell (subprocesses)")
+    p.add_argument("--include-quant", action="store_true",
+                   help="with --all: also run int8/int4 decode variants")
+    p.add_argument("--timeout", type=int, default=1800)
+    return p.parse_args(argv)
+
+
+def run_cell(args) -> dict:
+    import jax
+
+    from ..analysis import roofline as rl
+    from ..configs.base import SHAPES
+    from ..dist.sharding import Plan, pick_strategy
+    from ..models import get_model
+    from . import steps as steps_mod
+    from .mesh import make_production_mesh
+
+    cfg, model = get_model(args.arch, moe_impl=args.moe_impl)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    strategy = (pick_strategy(cfg, shape.kind) if args.strategy == "auto"
+                else args.strategy)
+    plan = Plan(mesh=mesh, strategy=strategy, cfg=cfg,
+                fsdp_axis=args.fsdp_axis,
+                shard_experts=not args.no_shard_experts)
+
+    t0 = time.time()
+    lowerable = steps_mod.make_step(
+        shape.kind, model, plan, shape, quant_bits=args.quant,
+        group=args.group, remat=args.remat)
+    lowered = lowerable.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {k: getattr(ma, k) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes")} if ma is not None else {}
+    ca = compiled.cost_analysis() or {}
+    ca_small = {k: ca[k] for k in ("flops", "bytes accessed", "transcendentals")
+                if k in ca}
+
+    n_chips = mesh.devices.size
+    hlo_text = compiled.as_text()
+    roof, summ = rl.from_hlo(hlo_text, cfg, shape, n_chips,
+                             w_bits=args.quant or 16)
+
+    per_chip_hbm = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)
+                    + mem.get("output_size_in_bytes", 0)
+                    - mem.get("alias_size_in_bytes", 0))
+    # XLA:CPU legalizes bf16 dots to f32, materializing f32 twins of the
+    # bf16 saved-activation stacks (TPU keeps bf16 natively). Subtract the
+    # duplicated f32 stacks for a TPU-representative fit estimate; both
+    # numbers are reported.
+    cpu_excess = _bf16_dup_excess(hlo_text)
+    per_chip_tpu = per_chip_hbm - cpu_excess
+    out = {
+        "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+        "n_chips": n_chips, "strategy": strategy, "kind": shape.kind,
+        "quant": args.quant, "group": args.group, "remat": args.remat,
+        "moe_impl": args.moe_impl, "tag": args.tag,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "per_chip_bytes": per_chip_hbm,
+        "cpu_f32_dup_bytes": cpu_excess,
+        "per_chip_bytes_tpu_corrected": per_chip_tpu,
+        "fits_16gb": bool(per_chip_tpu < 16e9) if mem else None,
+        "cost_analysis": ca_small,
+        "hlo": {
+            "flops": summ.flops, "bytes": summ.bytes,
+            "collective_bytes": summ.collective_bytes,
+            "collective_counts": summ.collective_counts,
+        },
+        "roofline": roof.as_dict(),
+    }
+    return out
+
+
+def _bf16_dup_excess(hlo_text: str) -> float:
+    """Bytes of f32 activation buffers that have an identically-shaped
+    bf16 twin (CPU bf16-dot legalization artifact; absent on TPU)."""
+    import math
+    import re as _re
+
+    f32 = set()
+    bf16 = set()
+    for m in _re.finditer(r"(f32|bf16)\[([\d,]+)\]", hlo_text):
+        (f32 if m.group(1) == "f32" else bf16).add(m.group(2))
+    excess = 0.0
+    for dims in f32 & bf16:
+        n = math.prod(int(d) for d in dims.split(","))
+        if n * 4 >= 256e6:  # only large activation stacks
+            excess += n * 4.0
+    return excess
+
+
+def cell_list(include_quant: bool = False):
+    from ..configs.base import applicable_shapes
+    from ..models import ARCH_IDS, get_config
+
+    cells = []
+    for arch in ARCH_IDS:
+        if arch == "brecq_lm_100m":
+            continue  # paper model is exercised by benchmarks, not the 40-cell table
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            for mesh in ("single", "multi"):
+                cells.append((arch, shape, mesh, None))
+                if include_quant and shape in ("decode_32k", "long_500k") and mesh == "single":
+                    cells.append((arch, shape, mesh, 4))
+    return cells
+
+
+def main():
+    args = parse_args()
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = cell_list(args.include_quant)
+        print(f"dry-run sweep: {len(cells)} cells")
+        failures = []
+        for arch, shape, mesh, quant in cells:
+            tag = f"_w{quant}" if quant else ""
+            name = f"{arch}_{shape}_{mesh}{tag}"
+            path = outdir / f"{name}.json"
+            if path.exists():
+                print(f"[skip] {name} (cached)")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--out", str(outdir)]
+            if quant:
+                cmd += ["--quant", str(quant), "--tag", f"w{quant}"]
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            ok = r.returncode == 0 and path.exists()
+            print(f"[{'ok' if ok else 'FAIL'}] {name} ({time.time()-t0:.0f}s)")
+            if not ok:
+                failures.append(name)
+                (outdir / f"{name}.err").write_text(r.stdout[-4000:] + "\n---\n"
+                                                    + r.stderr[-8000:])
+        print(f"done: {len(cells) - len(failures)}/{len(cells)} ok")
+        if failures:
+            print("failures:", failures)
+            sys.exit(1)
+        return
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    out = run_cell(args)
+    tag = f"_{args.tag}" if args.tag else ""
+    name = f"{args.arch}_{args.shape}_{args.mesh}{tag}.json"
+    path = outdir / name
+    path.write_text(json.dumps(out, indent=1, default=float))
+    print(json.dumps({k: out[k] for k in
+                      ("arch", "shape", "mesh", "strategy", "per_chip_bytes",
+                       "fits_16gb", "compile_s")}, default=float))
+    print("memory_analysis:", out["memory_analysis"])
+    print("cost_analysis:", out["cost_analysis"])
+    print("roofline:", json.dumps(out["roofline"], indent=1, default=float))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Batched serving driver: prefill + decode with optional BRECQ weights.
+
+Serves a (small, host-runnable) model with continuous batched requests:
+  1. load FP or BRECQ-quantized params (packed-int deployment format),
+  2. prefill the prompt batch, 3. decode N tokens with the jitted step,
+  4. report tokens/s and (if quantized) the bytes saved.
+
+The production-mesh serving path is exercised by dryrun.py decode cells;
+this driver runs the same model code end-to-end on the host.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import Corpus, CorpusConfig
+from ..dist import deploy
+from ..models import get_model
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="brecq_lm_100m")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--prompt-len", type=int, default=64)
+    p.add_argument("--gen-len", type=int, default=32)
+    p.add_argument("--quant", type=int, default=None, choices=[2, 4, 8])
+    p.add_argument("--group", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    return p.parse_args(argv)
+
+
+def tree_bytes(t) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+
+
+def main(argv=None, params=None):
+    args = parse_args(argv)
+    cfg, model = get_model(args.arch, reduced=args.reduced)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(args.seed))
+    fp_bytes = tree_bytes(params)
+    if args.quant is not None:
+        params = deploy.quantize_tree(params, args.quant, args.group)
+        print(f"quantized W{args.quant}: {fp_bytes/1e6:.1f}MB -> "
+              f"{tree_bytes(params)/1e6:.1f}MB")
+
+    corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
+    prompts = jnp.asarray(corpus.sample(args.batch, args.prompt_len, seed=7))
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        rng = np.random.default_rng(0)
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.enc_dec:
+        rng = np.random.default_rng(0)
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(args.batch, args.prompt_len, cfg.d_model)), jnp.float32)
+
+    max_len = args.prompt_len + args.gen_len
+    cache = model.init_cache(args.batch, max_len, jnp.float32)
+
+    t0 = time.time()
+    prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c, remat="none"))
+    logits, cache = prefill(params, batch, cache)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(model.decode_step, donate_argnums=(2,))
+    tok = jnp.argmax(logits, -1)[:, None]
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(args.gen_len - 1):
+        pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
+        logits, cache = decode(params, tok, cache, pos)
+        tok = jnp.argmax(logits, -1)[:, None]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    toks = args.batch * (args.gen_len - 1)
+    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
+          f"decode {toks} tokens in {t_decode:.2f}s "
+          f"({toks/max(t_decode,1e-9):.1f} tok/s)")
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print("sample:", np.asarray(gen[0][:16]))
+    return gen
+
+
+if __name__ == "__main__":
+    main()

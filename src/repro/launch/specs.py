@@ -1,0 +1,39 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation: the dry-run lowers against these. Modality
+frontends are stubs per the assignment — VLM patch embeddings and
+whisper frame embeddings appear here as precomputed (B, P|S, d) floats.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Batch pytree of ShapeDtypeStructs for train/prefill steps."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = SDS((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_dec:
+        batch["frames"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec, model) -> tuple[dict, dict, SDS]:
+    """(token batch, cache, pos) stand-ins for one decode step with a
+    KV cache of ``shape.seq_len`` tokens."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = SDS((B, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S, jnp.bfloat16))
+    pos = SDS((B,), jnp.int32)
+    return {"tokens": tokens}, cache, pos
+
+
+def params_specs(model) -> dict:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,237 @@
+"""Step builders: jitted train / prefill / decode with explicit shardings.
+
+Mixed precision policy: f32 master params, bf16 compute (cast inside the
+loss so gradients land back in f32). Buffers are donated (params + opt
+state on train; cache on serve) so steady-state memory is one copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..dist import deploy
+from ..dist.sharding import Plan
+from ..optim import adam
+from . import specs as specs_mod
+
+Array = jax.Array
+
+
+def cast_float(tree, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+@dataclasses.dataclass
+class Lowerable:
+    """A step function + the abstract args and shardings to lower it with."""
+
+    fn: Any
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jit().lower(*self.args)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def act_shard_fn(plan: Plan, global_batch: int, seq_len: int = 0):
+    """Pin activation shardings: (B,S,d) hidden states and (B,E,C,d) MoE
+    dispatch tensors (experts over "model" when the batch doesn't use it).
+
+    For tp/fsdp the block-boundary hidden state is additionally sequence-
+    sharded over "model" (Megatron-style sequence parallelism): remat-
+    saved layer inputs then live model_size-times more sharded, and the
+    gather back to full sequence merges with the TP all-gather the
+    attention layer needs anyway."""
+    bspec = plan.batch_spec(global_batch, 3, seq_axis=1, seq_len=0)
+    b_axes = plan.batch_axes(global_batch)
+    e_axis = None if "model" in b_axes else "model"
+    seq_axis = None
+    if (getattr(plan, "seq_parallel", False)
+            and plan.strategy in ("tp", "fsdp") and e_axis == "model"
+            and seq_len and seq_len % (plan.mesh.shape["model"] * 128) == 0):
+        seq_axis = "model"
+
+    def shard(x, kind="tokens"):
+        if kind == "expert_major":  # (B, E, ...) MoE routing/dispatch
+            spec = P(bspec[0], e_axis, *([None] * (x.ndim - 2)))
+        elif x.ndim == 3:
+            sa = seq_axis if x.shape[1] == seq_len else None
+            spec = P(bspec[0], sa, None)
+        else:
+            spec = P(bspec[0], *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(plan.mesh, spec))
+
+    return shard
+
+
+def make_train_step(model, plan: Plan, shape: ShapeSpec,
+                    acfg: Optional[adam.AdamConfig] = None,
+                    remat: str = "dots", aux_weight: float = 0.01) -> Lowerable:
+    acfg = acfg or adam.AdamConfig(lr=3e-4, grad_clip=1.0)
+    shard = act_shard_fn(plan, shape.global_batch, shape.seq_len)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(cast_float(p), batch, remat=remat,
+                              aux_weight=aux_weight, act_shard=shard)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params2, opt_state2 = adam.update(acfg, grads, opt_state, params)
+        metrics = {"loss": loss, "gnorm": adam.global_norm(grads)}
+        return params2, opt_state2, metrics
+
+    params_sds = specs_mod.params_specs(model)
+    opt_sds = jax.eval_shape(adam.init, params_sds)
+    batch_sds = specs_mod.input_specs(model.cfg, shape)
+
+    p_sh = plan.params_sharding(params_sds)
+    o_sh = {"m": plan.opt_sharding(opt_sds["m"]),
+            "v": plan.opt_sharding(opt_sds["v"]),
+            "count": NamedSharding(plan.mesh, P())}
+    b_sh = plan.batch_sharding(batch_sds, shape.global_batch, shard_seq=True)
+    rep = NamedSharding(plan.mesh, P())
+    return Lowerable(
+        fn=train_step,
+        args=(params_sds, opt_sds, batch_sds),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, {"loss": rep, "gnorm": rep}),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _serve_params(model, quant_bits: Optional[int], group: Optional[int]):
+    """Abstract serving params: bf16, or packed-int deployment format."""
+    params_sds = specs_mod.params_specs(model)
+    if quant_bits is None:
+        return jax.eval_shape(partial(cast_float, dtype=jnp.bfloat16), params_sds)
+    return jax.eval_shape(
+        lambda p: deploy.quantize_tree(p, quant_bits, group), params_sds)
+
+
+def make_prefill_step(model, plan: Plan, shape: ShapeSpec,
+                      quant_bits: Optional[int] = None,
+                      group: Optional[int] = None,
+                      remat: str = "dots") -> Lowerable:
+    shard = act_shard_fn(plan, shape.global_batch, shape.seq_len)
+
+    def prefill_step(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache, remat=remat,
+                                      act_shard=shard)
+        return logits, cache
+
+    params_sds = _serve_params(model, quant_bits, group)
+    batch_sds = specs_mod.input_specs(model.cfg, shape)
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, jnp.bfloat16))
+
+    p_sh = plan.params_sharding(params_sds)
+    b_sh = plan.batch_sharding(batch_sds, shape.global_batch, shard_seq=True)
+    c_sh = plan.cache_sharding(cache_sds, shape.global_batch)
+    return Lowerable(
+        fn=prefill_step,
+        args=(params_sds, batch_sds, cache_sds),
+        in_shardings=(p_sh, b_sh, c_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )
+
+
+def cache_shard_fn(plan: Plan, global_batch: int):
+    """Per-layer cache constraint inside the decode scan: the stacked
+    cache spec minus its leading (layer) dim."""
+
+    bspec = plan.batch_spec(global_batch, 2)
+
+    def shard(x, leaf):
+        if leaf == "q":  # decode query: batch-sharded, replicated elsewhere
+            spec = P(bspec[0], *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(plan.mesh, spec))
+        if leaf == "scores":  # (B,K,G,S): follow the cache's seq sharding
+            sa = "model" if x.shape[-1] % plan.mesh.shape["model"] == 0 else None
+            spec = P(bspec[0], *([None] * (x.ndim - 2)), sa)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(plan.mesh, spec))
+
+        class _K:  # fake path keys for the rule engine
+            def __init__(self, key):
+                self.key = key
+
+        spec = plan.cache_spec((_K("stack"), _K(leaf)),
+                               (1, *x.shape), global_batch)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(plan.mesh, P(*spec[1:])))
+
+    return shard
+
+
+def make_decode_step(model, plan: Plan, shape: ShapeSpec,
+                     quant_bits: Optional[int] = None,
+                     group: Optional[int] = None) -> Lowerable:
+    shard = act_shard_fn(plan, shape.global_batch)
+    cshard = cache_shard_fn(plan, shape.global_batch)
+
+    def decode_step(params, tokens, cache, pos):
+        logits, cache = model.decode_step(params, tokens, cache, pos,
+                                          act_shard=shard,
+                                          extras={"cache_shard": cshard})
+        return logits, cache
+
+    params_sds = _serve_params(model, quant_bits, group)
+    B = shape.global_batch
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len, jnp.bfloat16))
+
+    p_sh = plan.params_sharding(params_sds)
+    c_sh = plan.cache_sharding(cache_sds, B)
+    bspec = plan.batch_spec(B, 2)
+    tok_sh = NamedSharding(plan.mesh, bspec)
+    pos_sh = NamedSharding(plan.mesh, P(bspec[0]))
+    return Lowerable(
+        fn=decode_step,
+        args=(params_sds, tok_sds, cache_sds, pos_sds),
+        in_shardings=(p_sh, tok_sh, c_sh, pos_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )
+
+
+def make_step(kind: str, model, plan: Plan, shape: ShapeSpec, **kw) -> Lowerable:
+    if kind == "train":
+        kw.pop("quant_bits", None)
+        kw.pop("group", None)
+        return make_train_step(model, plan, shape, **kw)
+    if kind == "prefill":
+        return make_prefill_step(model, plan, shape, **kw)
+    if kind == "decode":
+        kw.pop("remat", None)
+        return make_decode_step(model, plan, shape, **kw)
+    raise ValueError(kind)

@@ -1,0 +1,62 @@
+"""Step-time watchdog: straggler detection + preemption-safe shutdown.
+
+At pod scale, the scheduler restarts slow/failed workers; the framework's
+job is to (a) notice abnormal step latency (EWMA z-score) and surface it,
+(b) checkpoint promptly on SIGTERM/SIGINT so a preempted worker loses at
+most one step. Both hooks live here and are consumed by launch/train.py.
+"""
+from __future__ import annotations
+
+import math
+import signal
+import time
+from typing import Callable, Optional
+
+
+class StepWatchdog:
+    def __init__(self, z_threshold: float = 4.0, alpha: float = 0.05,
+                 warmup: int = 5, log: Callable[[str], None] = print):
+        self.z = z_threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.log = log
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+        self.stragglers = 0
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.time()
+
+    def stop(self, step: int) -> float:
+        dt = time.time() - self._t0
+        self.n += 1
+        if self.mean is None:
+            self.mean = dt
+        else:
+            if self.n > self.warmup:
+                sd = math.sqrt(self.var) if self.var > 0 else self.mean * 0.1
+                if dt > self.mean + self.z * sd:
+                    self.stragglers += 1
+                    self.log(f"[watchdog] step {step}: {dt:.2f}s "
+                             f"(mean {self.mean:.2f}s +{self.z} sigma) — straggler")
+            delta = dt - self.mean
+            self.mean += self.alpha * delta
+            self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+        return dt
+
+
+class GracefulShutdown:
+    """SIGTERM/SIGINT -> finish the current step, checkpoint, exit."""
+
+    def __init__(self):
+        self.requested = False
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, self._handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.requested = True

@@ -1,0 +1,194 @@
+"""GQA / sliding-window / cross attention with KV caches.
+
+A single :class:`AttnSpec` covers all assigned archs' attention variants.
+Caches are ring buffers for windowed layers and linear buffers otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import Ctx
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # sliding-window size, None = global
+    causal: bool = True
+    use_rope: bool = True
+    qk_norm: bool = False  # qwen3-style per-head RMS on q/k
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+
+def init(key, spec: AttnSpec):
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": cm.dense_init(ks[0], spec.d_model, spec.n_heads * spec.head_dim),
+        "wk": cm.dense_init(ks[1], spec.d_model, spec.n_kv_heads * spec.head_dim),
+        "wv": cm.dense_init(ks[2], spec.d_model, spec.n_kv_heads * spec.head_dim),
+        "wo": cm.dense_init(ks[3], spec.n_heads * spec.head_dim, spec.d_model),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = cm.rmsnorm_init(spec.head_dim)
+        p["k_norm"] = cm.rmsnorm_init(spec.head_dim)
+    return p
+
+
+def _project_qkv(ctx: Ctx, p, spec: AttnSpec, x: Array, kv_x: Optional[Array] = None):
+    B, S = x.shape[:2]
+    kv_src = x if kv_x is None else kv_x
+    Skv = kv_src.shape[1]
+    q = cm.dense(ctx, p, "wq", x).reshape(B, S, spec.n_heads, spec.head_dim)
+    k = cm.dense(ctx, p, "wk", kv_src).reshape(B, Skv, spec.n_kv_heads, spec.head_dim)
+    v = cm.dense(ctx, p, "wv", kv_src).reshape(B, Skv, spec.n_kv_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = cm.rmsnorm(p["q_norm"], q)
+        k = cm.rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def apply(ctx: Ctx, p, spec: AttnSpec, x: Array,
+          kv_x: Optional[Array] = None, kv_pos: Optional[Array] = None) -> Array:
+    """Full-sequence attention (train / prefill without cache write).
+
+    ``kv_x`` switches to cross-attention against that source (no rope on
+    cross K by convention here; encoder positions use ``kv_pos``).
+    """
+    B, S = x.shape[:2]
+    q, k, v = _project_qkv(ctx, p, spec, x, kv_x)
+    q_pos = ctx.positions
+    if kv_x is None:
+        k_pos = ctx.positions
+        if spec.use_rope:
+            q = cm.apply_rope(q, q_pos, spec.rope_theta)
+            k = cm.apply_rope(k, k_pos, spec.rope_theta)
+        out = cm.chunked_attention(
+            q, k, v, q_pos, k_pos, causal=spec.causal, window=spec.window,
+            q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk, iota_pos=True)
+    else:
+        k_pos = kv_pos if kv_pos is not None else (
+            jnp.broadcast_to(jnp.arange(kv_x.shape[1]), (B, kv_x.shape[1])))
+        out = cm.chunked_attention(
+            q, k, v, q_pos, k_pos, causal=False, window=None,
+            q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk)
+    out = out.reshape(B, S, spec.n_heads * spec.head_dim)
+    return cm.dense(ctx, p, "wo", out)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(spec: AttnSpec, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Cache dict. Windowed layers use a ring buffer of size ``window``."""
+    slots = min(max_len, spec.window) if spec.window is not None else max_len
+    return {
+        "k": jnp.zeros((batch, slots, spec.n_kv_heads, spec.head_dim), dtype),
+        "v": jnp.zeros((batch, slots, spec.n_kv_heads, spec.head_dim), dtype),
+        "pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def prefill(ctx: Ctx, p, spec: AttnSpec, x: Array, cache) -> tuple[Array, dict]:
+    """Run full attention over the prompt and fill the cache."""
+    B, S = x.shape[:2]
+    q, k, v = _project_qkv(ctx, p, spec, x)
+    if spec.use_rope:
+        q = cm.apply_rope(q, ctx.positions, spec.rope_theta)
+        k = cm.apply_rope(k, ctx.positions, spec.rope_theta)
+    out = cm.chunked_attention(
+        q, k, v, ctx.positions, ctx.positions, causal=spec.causal,
+        window=spec.window, q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk,
+        iota_pos=True)
+    slots = cache["k"].shape[1]
+    if slots >= S:
+        cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            "pos": jax.lax.dynamic_update_slice(cache["pos"], ctx.positions.astype(jnp.int32), (0, 0)),
+        }
+    else:  # ring buffer smaller than the prompt: keep the tail
+        tail_k = k[:, S - slots:]
+        tail_v = v[:, S - slots:]
+        tail_p = ctx.positions[:, S - slots:]
+        # ring-consistent placement: slot = pos % slots
+        idx = tail_p[0] % slots
+        cache = {
+            "k": cache["k"].at[:, idx].set(tail_k.astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, idx].set(tail_v.astype(cache["v"].dtype)),
+            "pos": cache["pos"].at[:, idx].set(tail_p.astype(jnp.int32)),
+        }
+    out = out.reshape(B, S, spec.n_heads * spec.head_dim)
+    return cm.dense(ctx, p, "wo", out), cache
+
+
+def decode(ctx: Ctx, p, spec: AttnSpec, x: Array, cache) -> tuple[Array, dict]:
+    """One-token decode: append to cache, attend over it.
+
+    ``ctx.positions`` is (B, 1) with the current absolute position.
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(ctx, p, spec, x)
+    if spec.use_rope:
+        q = cm.apply_rope(q, ctx.positions, spec.rope_theta)
+        k = cm.apply_rope(k, ctx.positions, spec.rope_theta)
+    slots = cache["k"].shape[1]
+    pos = ctx.positions[:, 0]  # (B,)
+    slot = (pos % slots).astype(jnp.int32)
+    # vmapped per-batch scatter: explicit arange(B) indices would make the
+    # scatter unpartitionable and GSPMD would re-gather the whole cache
+    upd = jax.vmap(lambda c, s, val: c.at[s].set(val))
+    shard = ctx.extras.get("cache_shard") or (lambda t, leaf: t)
+    cache = {
+        "k": shard(upd(cache["k"], slot, k[:, 0].astype(cache["k"].dtype)), "k"),
+        "v": shard(upd(cache["v"], slot, v[:, 0].astype(cache["v"].dtype)), "v"),
+        "pos": shard(upd(cache["pos"], slot, pos.astype(jnp.int32)), "pos"),
+    }
+    # replicate the (tiny) query so attention computes against the cache
+    # IN PLACE (seq-sharded); without this GSPMD all-gathers the cache to
+    # match the head-sharded q (kv heads rarely divide the model axis)
+    q = shard(q, "q")
+    out = cm.decode_attend(
+        q, cache["k"].astype(q.dtype), cache["v"].astype(q.dtype),
+        cache["pos"], pos[:, None], window=spec.window,
+        shard=(shard if "cache_shard" in ctx.extras else None))
+    out = out.reshape(B, 1, spec.n_heads * spec.head_dim)
+    return cm.dense(ctx, p, "wo", out), cache
+
+
+# cross-attention cache: static K/V computed once from the memory --------------
+
+
+def xattn_cache(ctx: Ctx, p, spec: AttnSpec, memory: Array):
+    B, Sm = memory.shape[:2]
+    k = cm.dense(ctx, p, "wk", memory).reshape(B, Sm, spec.n_kv_heads, spec.head_dim)
+    v = cm.dense(ctx, p, "wv", memory).reshape(B, Sm, spec.n_kv_heads, spec.head_dim)
+    if spec.qk_norm:
+        k = cm.rmsnorm(p["k_norm"], k)
+    return {"k": k, "v": v}
+
+
+def xattn_decode(ctx: Ctx, p, spec: AttnSpec, x: Array, xcache) -> Array:
+    B = x.shape[0]
+    q = cm.dense(ctx, p, "wq", x).reshape(B, 1, spec.n_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = cm.rmsnorm(p["q_norm"], q)
+    Sm = xcache["k"].shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(Sm), (B, Sm))
+    out = cm.decode_attend(q, xcache["k"].astype(q.dtype), xcache["v"].astype(q.dtype),
+                           k_pos, jnp.full((B, 1), Sm, jnp.int32), window=None)
+    out = out.reshape(B, 1, spec.n_heads * spec.head_dim)
+    return cm.dense(ctx, p, "wo", out)

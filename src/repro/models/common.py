@@ -1,0 +1,383 @@
+"""Shared building blocks for all model families.
+
+Conventions
+-----------
+* Params are nested dicts of ``jnp`` arrays. A linear layer is
+  ``{'w': (in, out)}`` (+ optional ``'b'``). Weight layout is always
+  (reduction_dim, output_dim) so quantization group axes are uniform.
+* Every matmul goes through :func:`dense`, which consults the quant
+  context ``ctx.quant`` — the single hook BRECQ needs inside models.
+* ``ctx`` is a :class:`Ctx` carrying config, positions, masks and the
+  quant hook. It is closed over by scan bodies; all array members are
+  valid tracers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# quant hook
+# ---------------------------------------------------------------------------
+
+
+class QuantHook:
+    """Interface the models call; the default is a no-op (FP model).
+
+    ``weight(name, w)``: returns the (possibly fake-quantized) weight.
+    ``act(name, x)``: returns the (possibly fake-quantized) activation.
+    The BRECQ engine installs real implementations during calibration;
+    the serving path installs a baked/LSQ variant.
+    """
+
+    def weight(self, name: str, w: Array) -> Array:
+        return w
+
+    def act(self, name: str, x: Array) -> Array:
+        return x
+
+
+NO_QUANT = QuantHook()
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-forward context threaded through blocks."""
+
+    cfg: Any
+    positions: Array  # (B, S) absolute positions of the current tokens
+    quant: QuantHook = dataclasses.field(default_factory=lambda: NO_QUANT)
+    deterministic: bool = True
+    # decode-time info
+    decode: bool = False
+    cache_index: Optional[Array] = None  # scalar: #tokens already cached
+    # modality extras (VLM image embeds, enc-dec memory)
+    extras: dict = dataclasses.field(default_factory=dict)
+    # name scope for quant hook paths
+    scope: str = ""
+
+    def scoped(self, name: str) -> "Ctx":
+        return dataclasses.replace(self, scope=f"{self.scope}/{name}" if self.scope else name)
+
+
+# ---------------------------------------------------------------------------
+# initialisation helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> Params:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return {"w": jax.random.uniform(key, (d_in, d_out), dtype, -scale, scale)}
+
+
+def dense(ctx: Ctx, p: Params, name: str, x: Array) -> Array:
+    """Quant-aware linear: x @ W. The only matmul entry point.
+
+    A ``qscale`` sibling marks a packed-int deployment weight
+    (dist.deploy); bits/group are inferred from the shapes.
+    """
+    node = p[name]
+    if "qscale" in node:
+        from ..dist.deploy import dequant_leaf
+
+        w = dequant_leaf(node["w"], node["qscale"], x.shape[-1])
+    else:
+        w = ctx.quant.weight(f"{ctx.scope}/{name}" if ctx.scope else name,
+                             node["w"])
+        x = ctx.quant.act(f"{ctx.scope}/{name}" if ctx.scope else name, x)
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    if "b" in node:
+        y = y + node["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    """Variance reduced in f32; normalization stays in x.dtype.
+
+    Deliberate: a full f32 copy of the hidden state as the first op of a
+    rematerialized block gets loop-hoisted by XLA into an f32 replica of
+    the whole saved-activation stack (~2x remat memory). The f32->reduce
+    chain here fuses into the reduction instead.
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * p["g"].astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True).astype(x.dtype)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return (x - mu) * inv * p["g"].astype(x.dtype) + p["b"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (B, S, H, hd); positions: (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed_lookup(ctx: Ctx, p: Params, tokens: Array) -> Array:
+    if "table_qscale" in p:  # int8 deployment table: gather, then dequant
+        rows = jnp.take(p["table"], tokens, axis=0).astype(jnp.float32)
+        return rows * p["table_qscale"][0]
+    table = ctx.quant.weight("embed/table", p["table"])
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_head(ctx: Ctx, p: Params, x: Array) -> Array:
+    """Output projection to vocab logits; may be tied to the embedding."""
+    if "qscale" in p:
+        from ..dist.deploy import dequant_leaf
+
+        w = dequant_leaf(p["w"], p["qscale"], x.shape[-1])
+    elif "table_qscale" in p:  # tied to an int8 table: (V, d) -> (d, V)
+        w = (p["table"].astype(jnp.float32) * p["table_qscale"][0]).T
+    else:
+        w = ctx.quant.weight("head/w", p["w"])  # (d, vocab)
+        x = ctx.quant.act("head/w", x)
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: Array, labels: Array, mask: Optional[Array] = None) -> Array:
+    """Mean next-token cross entropy. logits (B,S,V), labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# attention masks
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(q_pos: Array, k_pos: Array, window: Optional[int] = None) -> Array:
+    """(..., Sq, Sk) boolean mask. ``window`` enables sliding-window attn."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        m = m & (q_pos[..., :, None] - k_pos[..., None, :] < window)
+    return m
+
+
+MASK_VALUE = -1e30
+
+
+def mha(q: Array, k: Array, v: Array, mask: Optional[Array]) -> Array:
+    """Plain attention. q: (B,Sq,H,hd), k/v: (B,Sk,K,hd) with GQA repeat.
+
+    Suitable for short sequences; long-sequence paths use
+    :func:`chunked_attention`.
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[:, None] if mask.ndim == 3 else mask, scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_pos: Array,
+    k_pos: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    iota_pos: bool = False,
+) -> Array:
+    """Memory-efficient (flash-style) attention via double lax.scan.
+
+    Online-softmax over KV chunks, scanned over Q chunks. Peak transient
+    is (B, H, q_chunk, kv_chunk) instead of (B, H, Sq, Sk). This is the
+    XLA path; the Pallas TPU kernel mirrors the same schedule.
+
+    ``iota_pos=True`` asserts positions are plain aranges (train/prefill):
+    masks are then derived from broadcasted iota + scalar chunk offsets,
+    so XLA never materializes position-dependent mask stacks (those
+    dominate memory otherwise), and fully-masked KV chunks contribute a
+    constant that folds away.
+
+    q: (B,Sq,H,hd) k/v: (B,Sk,K,hd) q_pos: (B,Sq) k_pos: (B,Sk)
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0, (Sq, q_chunk, Sk, kv_chunk)
+    rep = H // K
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = 1.0 / jnp.sqrt(hd)
+
+    qc = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nk, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    if iota_pos:
+        qp = jnp.arange(nq, dtype=jnp.int32) * q_chunk  # chunk start offsets
+        kp = jnp.arange(nk, dtype=jnp.int32) * kv_chunk
+        rel = (jnp.arange(q_chunk, dtype=jnp.int32)[:, None]
+               - jnp.arange(kv_chunk, dtype=jnp.int32)[None, :])  # (qc, kc)
+    else:
+        qp = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+        kp = k_pos.reshape(B, nk, kv_chunk).transpose(1, 0, 2)
+
+    def q_step(_, q_in, kv_lo=0, kv_hi=nk):
+        qi, qpi = q_in  # (B, qc, H, hd), (B, qc) or scalar chunk offset
+
+        def kv_step(carry, kv_in):
+            m_prev, l_prev, acc = carry
+            ki, vi, kpi = kv_in  # (B, kc, K, hd), (B, kc) or scalar
+            if rep != 1:
+                ki = jnp.repeat(ki, rep, axis=2)
+                vi = jnp.repeat(vi, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, ki).astype(jnp.float32) * scale
+            if iota_pos:
+                # delta(q_abs - k_abs) = rel + (q0 - k0); mask from scalars
+                delta = rel + (qpi - kpi)  # (qc, kc)
+                mask = delta >= 0 if causal else jnp.full_like(delta, True, bool)
+                if window is not None:
+                    mask = mask & (delta < window)
+                if causal or window is not None:
+                    s = jnp.where(mask[None, None], s, MASK_VALUE)
+            else:
+                mask = qpi[:, None, :, None] >= kpi[:, None, None, :] if causal else True
+                if window is not None:
+                    mask = mask & (qpi[:, None, :, None] - kpi[:, None, None, :] < window)
+                if causal or window is not None:
+                    s = jnp.where(mask, s, MASK_VALUE)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vi.dtype), vi
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((B, H, q_chunk), jnp.float32),
+            jnp.zeros((B, H, q_chunk, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (kc[kv_lo:kv_hi], vc[kv_lo:kv_hi], kp[kv_lo:kv_hi]))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, qc, H, hd)
+
+    if iota_pos and causal and q_chunk == kv_chunk and Sq == Sk and nq <= 8:
+        # Triangle unroll: q-chunk loop unrolled in python with statically
+        # bounded inner KV scans — fully-masked chunk pairs are never
+        # computed (2x fewer attention FLOPs/bytes; more with a window).
+        # Bounded to nq<=8: at 32k (nq=32) the unroll made GSPMD reshard
+        # k/v per chunk and collectives grew 5.6x (measured, cell A).
+        outs = []
+        for i in range(nq):
+            lo = 0
+            if window is not None:
+                lo = max(0, (i * q_chunk - (window - 1)) // kv_chunk)
+            _, o = q_step(None, (qc[i], qp[i]), kv_lo=lo, kv_hi=i + 1)
+            outs.append(o)
+        return jnp.stack(outs, 0).transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, qp))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def decode_attend(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    k_pos: Array,
+    cur_pos: Array,
+    *,
+    window: Optional[int] = None,
+    shard=None,
+) -> Array:
+    """Single-token decode attention against a cache.
+
+    GQA-native (no head-repeat of the cache): the cache stays in its
+    (B, S, K, hd) layout — typically sequence-sharded — and the grouped
+    einsums contract against it in place. ``shard`` optionally pins the
+    score sharding so GSPMD keeps the reduction distributed.
+
+    q: (B,1,H,hd); caches (B,S,K,hd); k_pos (B,S) absolute positions of
+    cache slots (-1 for empty); cur_pos scalar/array current position.
+    """
+    B, _, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s / jnp.sqrt(hd)
+    valid = (k_pos >= 0) & (k_pos <= cur_pos)
+    if window is not None:
+        valid = valid & (cur_pos - k_pos < window)
+    s = jnp.where(valid[:, None, None, :], s, MASK_VALUE)
+    if shard is not None:
+        s = shard(s, "scores")
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,155 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, S_enc, d_model). The encoder is
+a bidirectional transformer; the decoder interleaves causal self-attn and
+cross-attn over the encoder memory. Exposes the same public API as
+:class:`transformer.LM` (forward / loss / init_cache / prefill /
+decode_step) plus the BRECQ block decomposition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn_mod
+from . import common as cm
+from . import mlp as mlp_mod
+from .common import Ctx, NO_QUANT, QuantHook
+from .transformer import (LM, StackDef, SubLayer, _maybe_remat, _norm,
+                          _norm_init)
+
+Array = jax.Array
+Params = Any
+
+
+ENC_SUB = SubLayer("attn", causal=False, ffn="mlp")
+DEC_SUBS = (SubLayer("attn", ffn=None), SubLayer("xattn", ffn="mlp"))
+
+
+class EncDecLM(LM):
+    """Encoder stack + decoder stack; decoder cross-attends to the encoder."""
+
+    _act_shard = None
+
+    def __init__(self, cfg: ArchConfig, **kw):
+        super().__init__(cfg, **kw)
+        self.enc_stack = StackDef("enc", cfg.n_layers, (ENC_SUB,))
+        self.dec_stack = StackDef("dec", cfg.n_layers, (DEC_SUBS[0], DEC_SUBS[1]))
+        self.stacks = [self.dec_stack]  # BRECQ walks enc then dec via blocks()
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        params: dict = {
+            "embed": cm.embed_init(ks[0], cfg.vocab, cfg.d_model),
+            "enc_pos": jnp.zeros((cfg_max_enc(cfg), cfg.d_model), jnp.float32),
+            "enc_norm": _norm_init(cfg),
+            "final_norm": _norm_init(cfg),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = {"w": jax.random.normal(ks[1], (cfg.d_model, cfg.vocab), jnp.float32) * 0.02}
+        ekeys = jax.random.split(ks[2], self.enc_stack.n)
+        params["enc"] = jax.vmap(lambda k: self._init_block(k, self.enc_stack))(ekeys)
+        dkeys = jax.random.split(ks[3], self.dec_stack.n)
+        params["dec"] = jax.vmap(lambda k: self._init_block(k, self.dec_stack))(dkeys)
+        return params
+
+    # -- encoder ---------------------------------------------------------------
+
+    def encode(self, params: Params, frames: Array, quant: QuantHook = NO_QUANT,
+               *, remat: Optional[str] = "dots", act_shard=None) -> Array:
+        """frames: (B, S_enc, d_model) precomputed embeddings (stub frontend)."""
+        shard = (lambda t: act_shard(t)) if act_shard else (lambda t: t)
+        B, S, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = Ctx(cfg=self.cfg, positions=pos, quant=quant)
+        x = shard(frames + params["enc_pos"][:S])
+
+        def body(x, p_i):
+            y, _ = self.apply_block(ctx, self.enc_stack, p_i, x)
+            return shard(y), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["enc"])
+        return _norm(self.cfg, params["enc_norm"], x)
+
+    # -- joint forward -----------------------------------------------------------
+
+    def begin(self, params: Params, batch: dict, quant: QuantHook = NO_QUANT):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = Ctx(cfg=self.cfg, positions=pos, quant=quant)
+        if "memory" in batch:
+            ctx.extras["memory"] = batch["memory"]
+        else:
+            ctx.extras["memory"] = self.encode(params, batch["frames"], quant,
+                                               act_shard=self._act_shard)
+        x = cm.embed_lookup(ctx, params["embed"], tokens)
+        return x, ctx
+
+    def forward(self, params: Params, batch: dict, quant: QuantHook = NO_QUANT,
+                *, remat: Optional[str] = "dots", act_q=None, act_shard=None):
+        shard = (lambda t: act_shard(t)) if act_shard else (lambda t: t)
+        self._act_shard = act_shard
+        x, ctx = self.begin(params, batch, quant)
+        x = shard(x)
+
+        def body(x, p_i):
+            y, _ = self.apply_block(ctx, self.dec_stack, p_i, x)
+            return shard(y), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["dec"])
+        return self.finish(params, x, ctx), jnp.zeros((), jnp.float32)
+
+    # -- serving -------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        one = {f"sub{i}": self._init_sub_cache(s, batch, max_len, dtype)
+               for i, s in enumerate(self.dec_stack.subs)}
+        return {"dec": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (self.dec_stack.n, *a.shape)), one)}
+
+    def prefill(self, params, batch: dict, cache, quant: QuantHook = NO_QUANT,
+                *, remat: Optional[str] = "dots", act_shard=None):
+        self._act_shard = act_shard
+        x, ctx = self.begin(params, batch, quant)
+        if act_shard:
+            x = act_shard(x)
+
+        def body(x, xs):
+            p_i, c_i = xs
+            for i, sub in enumerate(self.dec_stack.subs):
+                x, c_i[f"sub{i}"] = self._sub_prefill(ctx, sub, i, p_i[f"sub{i}"], x, c_i[f"sub{i}"])
+            return x, c_i
+
+        x, cache["dec"] = jax.lax.scan(_maybe_remat(body, remat), x,
+                                       (params["dec"], cache["dec"]))
+        logits = self.finish(params, x[:, -1:], ctx)
+        return logits[:, 0], cache
+
+    def decode_step(self, params, tokens: Array, cache, pos: Array,
+                    quant: QuantHook = NO_QUANT, extras: Optional[dict] = None,
+                    act_shard=None):
+        positions = pos[:, None].astype(jnp.int32)
+        ctx = Ctx(cfg=self.cfg, positions=positions, quant=quant, decode=True)
+        x = cm.embed_lookup(ctx, params["embed"], tokens)
+
+        def body(x, xs):
+            p_i, c_i = xs
+            for i, sub in enumerate(self.dec_stack.subs):
+                x, c_i[f"sub{i}"] = self._sub_decode(ctx, sub, i, p_i[f"sub{i}"], x, c_i[f"sub{i}"])
+            return x, c_i
+
+        x, cache["dec"] = jax.lax.scan(body, x, (params["dec"], cache["dec"]))
+        logits = self.finish(params, x, ctx)
+        return logits[:, 0], cache
+
+
+def cfg_max_enc(cfg: ArchConfig) -> int:
+    # learned encoder positions sized to the largest prefill shape we lower
+    return 32768

@@ -1,0 +1,42 @@
+"""Feed-forward variants: SwiGLU (llama family) and GELU (whisper/gemma)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import Ctx
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    d_model: int
+    d_ff: int
+    kind: str = "swiglu"  # 'swiglu' | 'gelu'
+
+
+def init(key, spec: MLPSpec):
+    ks = jax.random.split(key, 3)
+    if spec.kind == "swiglu":
+        return {
+            "w_gate": cm.dense_init(ks[0], spec.d_model, spec.d_ff),
+            "w_up": cm.dense_init(ks[1], spec.d_model, spec.d_ff),
+            "w_down": cm.dense_init(ks[2], spec.d_ff, spec.d_model),
+        }
+    return {
+        "w_up": cm.dense_init(ks[0], spec.d_model, spec.d_ff),
+        "w_down": cm.dense_init(ks[1], spec.d_ff, spec.d_model),
+    }
+
+
+def apply(ctx: Ctx, p, spec: MLPSpec, x: Array) -> Array:
+    if spec.kind == "swiglu":
+        g = cm.dense(ctx, p, "w_gate", x)
+        u = cm.dense(ctx, p, "w_up", x)
+        return cm.dense(ctx, p, "w_down", jax.nn.silu(g) * u)
+    h = jax.nn.gelu(cm.dense(ctx, p, "w_up", x))
+    return cm.dense(ctx, p, "w_down", h)

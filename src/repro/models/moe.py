@@ -1,0 +1,187 @@
+"""Mixture-of-Experts layers (deepseek-moe, qwen3-moe).
+
+Two execution paths share one parameterization:
+
+* ``impl='dense'`` — every expert runs on every token, combined by the
+  (sparse) gate matrix. Exact token-choice semantics; used for reduced
+  configs, BRECQ calibration and unit tests.
+* ``impl='capacity'`` — deployment path: per-expert top-C token
+  selection (gather -> grouped einsum -> scatter-add). FLOPs scale with
+  k/E like the real model; experts shard over the ``model`` mesh axis
+  (EP). Tokens beyond capacity are dropped, mirroring GShard/Switch-style
+  capacity routing; the difference vs. exact token-choice is recorded in
+  DESIGN.md.
+
+The router stays FP under quantization (see DESIGN.md §2); expert weights
+are stacked (E, d_in, d_out) and quantize per-output-channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from . import mlp as mlp_mod
+from .common import Ctx
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int  # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0  # shared (always-on) experts, deepseek-style
+    capacity_factor: float = 1.25
+    norm_topk: bool = True
+    impl: str = "dense"  # 'dense' | 'capacity'
+
+
+def init(key, spec: MoESpec):
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(spec.d_model)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (spec.d_model, spec.n_experts), jnp.float32) * scale},
+        "w_gate": {"w": jax.random.uniform(ks[1], (spec.n_experts, spec.d_model, spec.d_ff), jnp.float32, -scale, scale)},
+        "w_up": {"w": jax.random.uniform(ks[2], (spec.n_experts, spec.d_model, spec.d_ff), jnp.float32, -scale, scale)},
+        "w_down": {"w": jax.random.uniform(ks[3], (spec.n_experts, spec.d_ff, spec.d_model), jnp.float32, -scale, scale)},
+    }
+    if spec.n_shared:
+        p["shared"] = mlp_mod.init(
+            ks[4], mlp_mod.MLPSpec(spec.d_model, spec.d_ff * spec.n_shared, "swiglu"))
+    return p
+
+
+def _router_probs(ctx: Ctx, p, spec: MoESpec, x: Array) -> Array:
+    # router is FP: bypass the quant hook on purpose. x: (..., d) -> (..., E)
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"]["w"])
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _topk(x: Array, k: int) -> tuple[Array, Array]:
+    """Partition-friendly, differentiable top-k on the last axis.
+
+    jax.lax.top_k lowers to a TopK custom-call that GSPMD cannot
+    partition (it replicates the operand — measured 309 GB of gathers on
+    the qwen3 train cell). A sort HLO partitions on every non-sorted dim;
+    its indices need no gradient (stop_gradient), and the selected values
+    are re-gathered with a batched row gather so the backward pass is the
+    plain scatter-add GSPMD already partitions."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    _, idx = jax.lax.sort_key_val(jax.lax.stop_gradient(x), iota, dimension=-1)
+    idx = jax.lax.rev(jax.lax.slice_in_dim(idx, x.shape[-1] - k, x.shape[-1],
+                                           axis=x.ndim - 1), (x.ndim - 1,))
+    take_row = lambda row, t: row[t]
+    for _ in range(x.ndim - 1):
+        take_row = jax.vmap(take_row)
+    return take_row(x, idx), idx
+
+
+def _topk_gates(probs: Array, spec: MoESpec) -> tuple[Array, Array]:
+    gates, eids = _topk(probs, spec.top_k)  # (..., k)
+    if spec.norm_topk:
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, eids
+
+
+def _read_w(ctx: Ctx, p, name: str, k: int):
+    node = p[name]
+    if "qscale" in node:
+        from ..dist.deploy import dequant_leaf
+
+        return dequant_leaf(node["w"], node["qscale"], k)
+    return ctx.quant.weight(f"{ctx.scope}/{name}", node["w"])
+
+
+def _expert_ffn(ctx: Ctx, p, xe: Array) -> Array:
+    """(E, C, d) or (B, E, C, d) -> same, through stacked swiglu experts.
+
+    The hidden intermediates are pinned to the dispatch sharding so GSPMD
+    resolves the fsdp-axis on expert weights by gathering the (small)
+    weight shards instead of resharding the (large) activations."""
+    shard = ctx.extras.get("moe_shard") or (lambda t, kind: t)
+    d = xe.shape[-1]
+    wg = _read_w(ctx, p, "w_gate", d)
+    wu = _read_w(ctx, p, "w_up", d)
+    wd = _read_w(ctx, p, "w_down", wg.shape[-1])
+    eq_in = "...ecd,edf->...ecf"
+    eq_out = "...ecf,efd->...ecd"
+    xe = ctx.quant.act(f"{ctx.scope}/w_gate", xe)
+    g = shard(jnp.einsum(eq_in, xe, wg.astype(xe.dtype)), "expert_major")
+    u = shard(jnp.einsum(eq_in, xe, wu.astype(xe.dtype)), "expert_major")
+    h = jax.nn.silu(g) * u
+    h = ctx.quant.act(f"{ctx.scope}/w_down", h)
+    return shard(jnp.einsum(eq_out, h, wd.astype(xe.dtype)), "expert_major")
+
+
+def apply(ctx: Ctx, p, spec: MoESpec, x: Array) -> Array:
+    """x: (B, S, d). Batch-major throughout so GSPMD keeps everything on
+    the data shards; ``ctx.extras['moe_shard']`` (fn(x, kind)) pins the
+    routing/dispatch intermediates."""
+    B, S, d = x.shape
+    shard = ctx.extras.get("moe_shard") or (lambda t, kind: t)
+    probs = shard(_router_probs(ctx, p, spec, x), "tokens")  # (B,S,E)
+    gates, eids = _topk_gates(probs, spec)  # (B,S,k)
+
+    if spec.impl == "dense":
+        # combine matrix (B,S,E): gate weight where selected, else 0
+        comb = jnp.zeros((B, S, spec.n_experts), x.dtype)
+        bidx = jnp.arange(B)[:, None, None]
+        sidx = jnp.arange(S)[None, :, None]
+        comb = comb.at[bidx, sidx, eids].set(gates.astype(x.dtype))
+        # all experts on all tokens (exact; reduced configs only)
+        xe = jnp.broadcast_to(x[:, None], (B, spec.n_experts, S, d))
+        ye = _expert_ffn(ctx, p, xe)  # (B,E,S,d)
+        out = jnp.einsum("bse,besd->bsd", comb, ye)
+        return out + _shared(ctx, p, spec, x)
+
+    # capacity path: PER-SEQUENCE dispatch so routing gathers stay local
+    # to each data shard (a global top-C would make GSPMD all-gather every
+    # token). Capacity is per (sequence, expert); experts shard over the
+    # "model" axis and the combine psum is the only EP collective.
+    E = spec.n_experts
+    cap = int(max(1, round(S * spec.top_k * spec.capacity_factor / E)))
+    cap = min(cap, S)
+    # All gathers/scatters below are vmapped over B so XLA sees explicit
+    # operand-batching dims — a hand-rolled arange(B) index tensor makes
+    # the scatter unpartitionable and GSPMD replicates the full batch.
+    sidx = jnp.broadcast_to(jnp.arange(S)[:, None], eids.shape[1:])
+
+    def sel_b(eids_b, gates_b):
+        # (E, S): gate weight if token s picked expert e (top-k entries
+        # are distinct experts, so scatter-max == scatter-set)
+        z = jnp.full((E, S), -jnp.inf, jnp.float32)
+        return z.at[eids_b, sidx].max(gates_b.astype(jnp.float32))
+
+    sel = shard(jax.vmap(sel_b)(eids, gates), "expert_major")  # (B,E,S)
+    scores, tidx = _topk(sel, cap)  # (B, E, cap)
+    scores = shard(scores, "expert_major")
+    tidx = shard(tidx, "expert_major")
+    w = jnp.where(jnp.isfinite(scores), scores, 0.0).astype(x.dtype)
+    xe = shard(jax.vmap(lambda xb, tb: xb[tb])(x, tidx), "expert_major")
+    ye = _expert_ffn(ctx, p, xe)  # (B,E,cap,d)
+    ye = shard(ye * w[..., None], "expert_major")
+    out_b = jax.vmap(lambda tb, yb: jnp.zeros((S, d), x.dtype).at[tb].add(yb))(
+        tidx, ye)
+    return shard(out_b, "tokens") + _shared(ctx, p, spec, x)
+
+def _shared(ctx: Ctx, p, spec: MoESpec, x: Array) -> Array:
+    if not spec.n_shared:
+        return jnp.zeros((), x.dtype)
+    shared_spec = mlp_mod.MLPSpec(spec.d_model, spec.d_ff * spec.n_shared, "swiglu")
+    return mlp_mod.apply(ctx.scoped("shared"), p["shared"], shared_spec, x)
+
+
+def aux_loss(ctx: Ctx, p, spec: MoESpec, x: Array) -> Array:
+    """Switch-style load-balancing loss (used by the training loop)."""
+    probs = _router_probs(ctx, p, spec, x)  # (B,S,E)
+    _, eids = _topk_gates(probs, spec)
+    onehot = jax.nn.one_hot(eids, spec.n_experts).sum(2)  # (B,S,E)
+    frac_tokens = jnp.mean(onehot, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    return spec.n_experts * jnp.sum(frac_tokens * frac_probs)

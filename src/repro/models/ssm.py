@@ -1,0 +1,108 @@
+"""Selective SSM (Mamba-style) head used by the Hymba hybrid blocks.
+
+Training uses a first-order linear recurrence evaluated with
+``jax.lax.associative_scan`` over time; decode carries an explicit
+(B, d_inner, d_state) state plus a short conv buffer. Projections are
+quant-aware (they dominate the bytes); the per-channel A/D/dt params and
+gating stay FP (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import Ctx
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_model: int
+    d_inner: int
+    d_state: int = 16
+    d_conv: int = 4
+
+
+def init(key, spec: SSMSpec):
+    ks = jax.random.split(key, 7)
+    d, di, n = spec.d_model, spec.d_inner, spec.d_state
+    p = {
+        "in_proj": cm.dense_init(ks[0], d, 2 * di),  # -> (x, z-gate)
+        "wB": cm.dense_init(ks[1], di, n),
+        "wC": cm.dense_init(ks[2], di, n),
+        "w_dt": cm.dense_init(ks[3], di, di),
+        "out_proj": cm.dense_init(ks[4], di, d),
+        # FP per-channel params
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "conv_w": jax.random.normal(ks[5], (spec.d_conv, di), jnp.float32) * 0.1,
+    }
+    return p
+
+
+def _conv_causal(x: Array, w: Array) -> Array:
+    """Depthwise causal conv over time. x: (B,S,di), w: (K,di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return out
+
+
+def _ssm_coeffs(ctx: Ctx, p, spec: SSMSpec, xi: Array):
+    """Shared between scan/step. xi: (..., di) post-conv activations."""
+    dt = jax.nn.softplus(cm.dense(ctx, p, "w_dt", xi) + p["dt_bias"])  # (...,di)
+    A = -jnp.exp(p["A_log"])  # (di, n)
+    Bc = cm.dense(ctx, p, "wB", xi)  # (..., n)
+    Cc = cm.dense(ctx, p, "wC", xi)  # (..., n)
+    a = jnp.exp(dt[..., None] * A)  # (..., di, n)
+    b = dt[..., None] * Bc[..., None, :] * xi[..., None]  # (..., di, n)
+    return a, b, Cc
+
+
+def apply(ctx: Ctx, p, spec: SSMSpec, x: Array) -> Array:
+    """Full-sequence forward. x: (B,S,d) -> (B,S,d)."""
+    B, S, _ = x.shape
+    xz = cm.dense(ctx, p, "in_proj", x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = jax.nn.silu(_conv_causal(xi, p["conv_w"]))
+    a, b, Cc = _ssm_coeffs(ctx, p, spec, xi)  # (B,S,di,n)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cc.astype(jnp.float32)).astype(x.dtype)
+    y = y + p["D"] * xi
+    y = y * jax.nn.silu(z)
+    return cm.dense(ctx, p, "out_proj", y)
+
+
+def init_cache(spec: SSMSpec, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, spec.d_inner, spec.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, spec.d_conv - 1, spec.d_inner), dtype),
+    }
+
+
+def decode(ctx: Ctx, p, spec: SSMSpec, x: Array, cache) -> tuple[Array, dict]:
+    """One-step decode. x: (B,1,d)."""
+    xz = cm.dense(ctx, p, "in_proj", x)
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    buf = jnp.concatenate([cache["conv"], xi.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"]
+    xi_c = jnp.einsum("bkd,kd->bd", buf.astype(jnp.float32), w)[:, None].astype(x.dtype)
+    xi_c = jax.nn.silu(xi_c)
+    a, b, Cc = _ssm_coeffs(ctx, p, spec, xi_c[:, 0])  # (B,di,n)
+    h = a.astype(jnp.float32) * cache["h"] + b.astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32))[:, None].astype(x.dtype)
+    y = y + p["D"] * xi_c
+    y = y * jax.nn.silu(z)
+    new_cache = {"h": h, "conv": buf[:, 1:]}
+    return cm.dense(ctx, p, "out_proj", y), new_cache

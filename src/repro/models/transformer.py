@@ -1,0 +1,483 @@
+"""Decoder-only LM assembly covering dense / MoE / VLM / SSM / hybrid archs.
+
+A model is: embed -> [stack_0 ... stack_k] -> final norm -> head.
+Each *stack* is a scan over ``n`` identical (super-)blocks; a block is a
+sequence of :class:`SubLayer` (time mixer + optional channel mixer).
+This one assembly expresses:
+
+  dense            1 stack,  block = [attn + mlp]
+  sliding window   same, with ``window`` set
+  gemma3 5:1       block = [5 x attn(local) + 1 x attn(global)], n = L/6
+  moe              block = [attn + moe]  (+ leading dense stack, deepseek)
+  vlm              block = [4 x (attn+mlp) + 1 x (xattn+mlp)]
+  xlstm            block = [5 x mlstm + 1 x slstm], no FFN
+  hymba            block = [parallel(attn, ssm) + mlp]
+
+BRECQ consumes the same graph through begin()/apply_block()/finish():
+the block boundary here *is* the paper's reconstruction unit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn_mod
+from . import common as cm
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .common import Ctx, NO_QUANT, QuantHook
+
+Array = jax.Array
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SubLayer:
+    mixer: str  # 'attn' | 'xattn' | 'mlstm' | 'slstm' | 'hymba'
+    window: Optional[int] = None
+    ffn: Optional[str] = None  # 'mlp' | 'moe' | None
+    causal: bool = True
+    d_ff: int = 0  # mlp width override (0 -> cfg.d_ff)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackDef:
+    name: str
+    n: int
+    subs: tuple[SubLayer, ...]
+
+
+def build_stacks(cfg: ArchConfig) -> list[StackDef]:
+    if cfg.family == "ssm":  # xlstm
+        k = cfg.slstm_every or 6
+        assert cfg.n_layers % k == 0
+        subs = tuple([SubLayer("mlstm")] * (k - 1) + [SubLayer("slstm")])
+        return [StackDef("body", cfg.n_layers // k, subs)]
+    if cfg.family == "hybrid":
+        return [StackDef("body", cfg.n_layers,
+                         (SubLayer("hymba", window=cfg.hymba_window, ffn="mlp"),))]
+    if cfg.family == "vlm":
+        k = cfg.xattn_every or 5
+        assert cfg.n_layers % k == 0
+        subs = tuple([SubLayer("attn", ffn="mlp")] * (k - 1)
+                     + [SubLayer("xattn", ffn="mlp")])
+        return [StackDef("body", cfg.n_layers // k, subs)]
+    if cfg.family == "moe":
+        assert cfg.moe is not None
+        stacks = []
+        n_moe = cfg.n_layers - cfg.moe.first_k_dense
+        if cfg.moe.first_k_dense:
+            stacks.append(StackDef(
+                "dense0", cfg.moe.first_k_dense,
+                (SubLayer("attn", ffn="mlp", d_ff=cfg.moe.first_dense_ff),)))
+        stacks.append(StackDef("moe", n_moe, (SubLayer("attn", ffn="moe"),)))
+        return stacks
+    # dense family (incl. gemma local:global and SWA)
+    if cfg.local_global is not None:
+        nl, ng = cfg.local_global
+        grp = nl + ng
+        assert cfg.n_layers % grp == 0
+        subs = tuple([SubLayer("attn", window=cfg.local_window, ffn="mlp")] * nl
+                     + [SubLayer("attn", ffn="mlp")] * ng)
+        return [StackDef("body", cfg.n_layers // grp, subs)]
+    return [StackDef("body", cfg.n_layers, (SubLayer("attn", window=cfg.window, ffn="mlp"),))]
+
+
+# ---------------------------------------------------------------------------
+# per-sublayer specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg: ArchConfig, sub: SubLayer, cross: bool = False) -> attn_mod.AttnSpec:
+    return attn_mod.AttnSpec(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, rope_theta=cfg.rope_theta, window=sub.window,
+        causal=sub.causal and not cross, use_rope=not cross, qk_norm=cfg.qk_norm)
+
+
+def _mlp_spec(cfg: ArchConfig, sub: SubLayer) -> mlp_mod.MLPSpec:
+    return mlp_mod.MLPSpec(cfg.d_model, sub.d_ff or cfg.d_ff, cfg.mlp_kind)
+
+
+def _moe_spec(cfg: ArchConfig, impl: str) -> moe_mod.MoESpec:
+    m = cfg.moe
+    return moe_mod.MoESpec(cfg.d_model, m.d_ff_expert, m.n_experts, m.top_k,
+                           n_shared=m.n_shared, impl=impl)
+
+
+def _xlstm_spec(cfg: ArchConfig) -> xlstm_mod.XLSTMSpec:
+    return xlstm_mod.XLSTMSpec(cfg.d_model, cfg.n_heads, cfg.xlstm_expansion)
+
+
+def _ssm_spec(cfg: ArchConfig) -> ssm_mod.SSMSpec:
+    return ssm_mod.SSMSpec(cfg.d_model, int(cfg.d_model * cfg.ssm_expansion), cfg.ssm_state)
+
+
+def _norm_init(cfg: ArchConfig):
+    return cm.rmsnorm_init(cfg.d_model) if cfg.norm == "rms" else cm.layernorm_init(cfg.d_model)
+
+
+def _norm(cfg: ArchConfig, p, x):
+    return cm.rmsnorm(p, x) if cfg.norm == "rms" else cm.layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+
+class LM:
+    """Decoder-only language model over the stack/sub-layer graph."""
+
+    def __init__(self, cfg: ArchConfig, *, moe_impl: str = "dense"):
+        self.cfg = cfg
+        self.stacks = build_stacks(cfg)
+        self.moe_impl = moe_impl
+
+    # -- init ---------------------------------------------------------------
+
+    def _init_sub(self, key, sub: SubLayer) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p: dict = {"norm1": _norm_init(cfg)}
+        if sub.mixer == "attn":
+            p["attn"] = attn_mod.init(ks[0], _attn_spec(cfg, sub))
+        elif sub.mixer == "xattn":
+            p["attn"] = attn_mod.init(ks[0], _attn_spec(cfg, sub, cross=True))
+            p["xgate"] = jnp.zeros((), jnp.float32)
+        elif sub.mixer == "mlstm":
+            p["mix"] = xlstm_mod.mlstm_init(ks[0], _xlstm_spec(cfg))
+        elif sub.mixer == "slstm":
+            p["mix"] = xlstm_mod.slstm_init(ks[0], _xlstm_spec(cfg))
+        elif sub.mixer == "hymba":
+            p["attn"] = attn_mod.init(ks[0], _attn_spec(cfg, sub))
+            p["ssm"] = ssm_mod.init(ks[1], _ssm_spec(cfg))
+        else:
+            raise ValueError(sub.mixer)
+        if sub.ffn == "mlp":
+            p["norm2"] = _norm_init(cfg)
+            p["mlp"] = mlp_mod.init(ks[2], _mlp_spec(cfg, sub))
+        elif sub.ffn == "moe":
+            p["norm2"] = _norm_init(cfg)
+            p["moe"] = moe_mod.init(ks[2], _moe_spec(cfg, self.moe_impl))
+        return p
+
+    def _init_block(self, key, stack: StackDef) -> Params:
+        ks = jax.random.split(key, len(stack.subs))
+        return {f"sub{i}": self._init_sub(ks[i], s) for i, s in enumerate(stack.subs)}
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 3 + len(self.stacks))
+        params: dict = {"embed": cm.embed_init(ks[0], cfg.vocab, cfg.d_model),
+                        "final_norm": _norm_init(cfg)}
+        if not cfg.tie_embeddings:
+            params["head"] = {"w": jax.random.normal(ks[1], (cfg.d_model, cfg.vocab), jnp.float32) * 0.02}
+        for i, stack in enumerate(self.stacks):
+            bkeys = jax.random.split(ks[2 + i], stack.n)
+            params[stack.name] = jax.vmap(partial(self._init_block, stack=stack))(bkeys)
+        return params
+
+    # -- sub-layer / block application ---------------------------------------
+
+    def _apply_sub(self, ctx: Ctx, sub: SubLayer, idx: int, p: Params, x: Array) -> tuple[Array, Array]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        sc = ctx.scoped(f"sub{idx}")
+        h = _norm(cfg, p["norm1"], x)
+        if sub.mixer == "attn":
+            mix = attn_mod.apply(sc.scoped("attn"), p["attn"], _attn_spec(cfg, sub), h)
+        elif sub.mixer == "xattn":
+            mem = ctx.extras["memory"]
+            out = attn_mod.apply(sc.scoped("attn"), p["attn"], _attn_spec(cfg, sub, cross=True), h, kv_x=mem)
+            mix = jnp.tanh(p["xgate"]) * out
+        elif sub.mixer == "mlstm":
+            mix = xlstm_mod.mlstm_apply(sc.scoped("mix"), p["mix"], _xlstm_spec(cfg), h)
+        elif sub.mixer == "slstm":
+            mix = xlstm_mod.slstm_apply(sc.scoped("mix"), p["mix"], _xlstm_spec(cfg), h)
+        elif sub.mixer == "hymba":
+            a = attn_mod.apply(sc.scoped("attn"), p["attn"], _attn_spec(cfg, sub), h)
+            s = ssm_mod.apply(sc.scoped("ssm"), p["ssm"], _ssm_spec(cfg), h)
+            mix = 0.5 * (a + s)
+        else:
+            raise ValueError(sub.mixer)
+        x = x + mix
+        if sub.ffn == "mlp":
+            h = _norm(cfg, p["norm2"], x)
+            x = x + mlp_mod.apply(sc.scoped("mlp"), p["mlp"], _mlp_spec(cfg, sub), h)
+        elif sub.ffn == "moe":
+            h = _norm(cfg, p["norm2"], x)
+            x = x + moe_mod.apply(sc.scoped("moe"), p["moe"], _moe_spec(cfg, self.moe_impl), h)
+            aux = aux + moe_mod.aux_loss(sc.scoped("moe"), p["moe"], _moe_spec(cfg, self.moe_impl), h)
+        return x, aux
+
+    def apply_block(self, ctx: Ctx, stack: StackDef, p: Params, x: Array) -> tuple[Array, Array]:
+        aux = jnp.zeros((), jnp.float32)
+        for i, sub in enumerate(stack.subs):
+            x, a = self._apply_sub(ctx, sub, i, p[f"sub{i}"], x)
+            aux = aux + a
+        return x, aux
+
+    # -- full forward ---------------------------------------------------------
+
+    def begin(self, params: Params, batch: dict, quant: QuantHook = NO_QUANT) -> tuple[Array, Ctx]:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = Ctx(cfg=self.cfg, positions=positions, quant=quant)
+        x = cm.embed_lookup(ctx, params["embed"], tokens)
+        if self.cfg.family == "vlm":
+            ctx.extras["memory"] = batch["patches"]
+        return x, ctx
+
+    def finish(self, params: Params, x: Array, ctx: Ctx) -> Array:
+        x = _norm(self.cfg, params["final_norm"], x)
+        head_p = params["head"] if "head" in params else {"w": params["embed"]["table"].T}
+        return cm.lm_head(ctx, head_p, x)
+
+    def forward(self, params: Params, batch: dict, quant: QuantHook = NO_QUANT,
+                *, remat: Optional[str] = "dots", act_q=None,
+                act_shard=None) -> tuple[Array, Array]:
+        """Scan-based forward. Returns (logits, moe_aux).
+
+        ``act_shard`` (optional fn) pins the hidden-state sharding at the
+        embed output and on every scan carry — without it GSPMD can lose
+        the batch sharding through the loop and replicate activations.
+        """
+        shard = (lambda t: act_shard(t)) if act_shard else (lambda t: t)
+        x, ctx = self.begin(params, batch, quant)
+        if act_shard is not None:
+            ctx.extras["moe_shard"] = act_shard
+        x = shard(x)
+        aux = jnp.zeros((), jnp.float32)
+        for stack in self.stacks:
+            def body(carry, p_i, stack=stack):
+                x, aux = carry
+                x, a = self.apply_block(ctx, stack, p_i, x)
+                return (shard(x), aux + a), None
+
+            body_fn = _maybe_remat(body, remat)
+            (x, aux), _ = jax.lax.scan(body_fn, (x, aux), params[stack.name])
+        return self.finish(params, x, ctx), aux
+
+    def loss(self, params: Params, batch: dict, quant: QuantHook = NO_QUANT,
+             *, remat: Optional[str] = "dots", aux_weight: float = 0.01,
+             act_shard=None) -> Array:
+        logits, aux = self.forward(params, batch, quant, remat=remat,
+                                   act_shard=act_shard)
+        tokens = batch["tokens"]
+        return cm.softmax_xent(logits[:, :-1], tokens[:, 1:]) + aux_weight * aux
+
+    # -- serving ----------------------------------------------------------------
+
+    def _init_sub_cache(self, sub: SubLayer, batch: int, max_len: int, dtype):
+        cfg = self.cfg
+        if sub.mixer == "attn":
+            return {"attn": attn_mod.init_cache(_attn_spec(cfg, sub), batch, max_len, dtype)}
+        if sub.mixer == "xattn":
+            P = cfg.n_patches
+            spec = _attn_spec(cfg, sub, cross=True)
+            return {"xk": jnp.zeros((batch, P, spec.n_kv_heads, spec.head_dim), dtype),
+                    "xv": jnp.zeros((batch, P, spec.n_kv_heads, spec.head_dim), dtype)}
+        if sub.mixer == "mlstm":
+            return {"mix": xlstm_mod.mlstm_init_cache(_xlstm_spec(cfg), batch)}
+        if sub.mixer == "slstm":
+            return {"mix": xlstm_mod.slstm_init_cache(_xlstm_spec(cfg), batch)}
+        if sub.mixer == "hymba":
+            return {"attn": attn_mod.init_cache(_attn_spec(cfg, sub), batch, max_len, dtype),
+                    "ssm": ssm_mod.init_cache(_ssm_spec(cfg), batch, dtype)}
+        raise ValueError(sub.mixer)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cache = {}
+        for stack in self.stacks:
+            one = {f"sub{i}": self._init_sub_cache(s, batch, max_len, dtype)
+                   for i, s in enumerate(stack.subs)}
+            cache[stack.name] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (stack.n, *a.shape)), one)
+        return cache
+
+    def _sub_prefill(self, ctx: Ctx, sub: SubLayer, idx: int, p, x, cache):
+        cfg = self.cfg
+        sc = ctx.scoped(f"sub{idx}")
+        h = _norm(cfg, p["norm1"], x)
+        if sub.mixer == "attn":
+            out, cache["attn"] = attn_mod.prefill(sc.scoped("attn"), p["attn"], _attn_spec(cfg, sub), h, cache["attn"])
+            mix = out
+        elif sub.mixer == "xattn":
+            spec = _attn_spec(cfg, sub, cross=True)
+            xc = attn_mod.xattn_cache(sc.scoped("attn"), p["attn"], spec, ctx.extras["memory"])
+            cache = {"xk": xc["k"].astype(cache["xk"].dtype), "xv": xc["v"].astype(cache["xv"].dtype)}
+            out = attn_mod.apply(sc.scoped("attn"), p["attn"], spec, h, kv_x=ctx.extras["memory"])
+            mix = jnp.tanh(p["xgate"]) * out
+        elif sub.mixer in ("mlstm", "slstm"):
+            # recurrent prefill: run the parallel form, then rebuild the state
+            # by replaying the sequence through the chunk scan (mlstm) /
+            # closed-form final state (slstm).
+            mix, cache["mix"] = _xlstm_prefill(sc.scoped("mix"), sub.mixer, p["mix"], _xlstm_spec(cfg), h, cache["mix"])
+        elif sub.mixer == "hymba":
+            a, cache["attn"] = attn_mod.prefill(sc.scoped("attn"), p["attn"], _attn_spec(cfg, sub), h, cache["attn"])
+            s, cache["ssm"] = _ssm_prefill(sc.scoped("ssm"), p["ssm"], _ssm_spec(cfg), h, cache["ssm"])
+            mix = 0.5 * (a + s)
+        else:
+            raise ValueError(sub.mixer)
+        x = x + mix
+        if sub.ffn == "mlp":
+            x = x + mlp_mod.apply(sc.scoped("mlp"), p["mlp"], _mlp_spec(cfg, sub), _norm(cfg, p["norm2"], x))
+        elif sub.ffn == "moe":
+            x = x + moe_mod.apply(sc.scoped("moe"), p["moe"], _moe_spec(cfg, self.moe_impl), _norm(cfg, p["norm2"], x))
+        return x, cache
+
+    def _sub_decode(self, ctx: Ctx, sub: SubLayer, idx: int, p, x, cache):
+        cfg = self.cfg
+        sc = ctx.scoped(f"sub{idx}")
+        h = _norm(cfg, p["norm1"], x)
+        if sub.mixer == "attn":
+            out, cache["attn"] = attn_mod.decode(sc.scoped("attn"), p["attn"], _attn_spec(cfg, sub), h, cache["attn"])
+            mix = out
+        elif sub.mixer == "xattn":
+            spec = _attn_spec(cfg, sub, cross=True)
+            out = attn_mod.xattn_decode(sc.scoped("attn"), p["attn"], spec,
+                                        h, {"k": cache["xk"], "v": cache["xv"]})
+            mix = jnp.tanh(p["xgate"]) * out
+        elif sub.mixer == "mlstm":
+            mix, cache["mix"] = xlstm_mod.mlstm_decode(sc.scoped("mix"), p["mix"], _xlstm_spec(cfg), h, cache["mix"])
+        elif sub.mixer == "slstm":
+            mix, cache["mix"] = xlstm_mod.slstm_decode(sc.scoped("mix"), p["mix"], _xlstm_spec(cfg), h, cache["mix"])
+        elif sub.mixer == "hymba":
+            a, cache["attn"] = attn_mod.decode(sc.scoped("attn"), p["attn"], _attn_spec(cfg, sub), h, cache["attn"])
+            s, cache["ssm"] = ssm_mod.decode(sc.scoped("ssm"), p["ssm"], _ssm_spec(cfg), h, cache["ssm"])
+            mix = 0.5 * (a + s)
+        else:
+            raise ValueError(sub.mixer)
+        x = x + mix
+        if sub.ffn == "mlp":
+            x = x + mlp_mod.apply(sc.scoped("mlp"), p["mlp"], _mlp_spec(cfg, sub), _norm(cfg, p["norm2"], x))
+        elif sub.ffn == "moe":
+            x = x + moe_mod.apply(sc.scoped("moe"), p["moe"], _moe_spec(cfg, self.moe_impl), _norm(cfg, p["norm2"], x))
+        return x, cache
+
+    def prefill(self, params, batch: dict, cache, quant: QuantHook = NO_QUANT,
+                *, remat: Optional[str] = "dots", act_shard=None):
+        """Process the prompt; returns (last-token logits, filled cache)."""
+        shard = (lambda t: act_shard(t)) if act_shard else (lambda t: t)
+        x, ctx = self.begin(params, batch, quant)
+        if act_shard is not None:
+            ctx.extras["moe_shard"] = act_shard
+        x = shard(x)
+        for stack in self.stacks:
+            def body(x, xs, stack=stack):
+                p_i, c_i = xs
+                for i, sub in enumerate(stack.subs):
+                    x, c_i[f"sub{i}"] = self._sub_prefill(ctx, sub, i, p_i[f"sub{i}"], x, c_i[f"sub{i}"])
+                return shard(x), c_i
+
+            body_fn = _maybe_remat(body, remat)
+            x, cache[stack.name] = jax.lax.scan(body_fn, x, (params[stack.name], cache[stack.name]))
+        logits = self.finish(params, x[:, -1:], ctx)
+        return logits[:, 0], cache
+
+    def decode_step(self, params, tokens: Array, cache, pos: Array,
+                    quant: QuantHook = NO_QUANT, extras: Optional[dict] = None,
+                    act_shard=None):
+        """One decode step. tokens (B,1); pos (B,) absolute position."""
+        B = tokens.shape[0]
+        shard = (lambda t: act_shard(t)) if act_shard else (lambda t: t)
+        positions = pos[:, None].astype(jnp.int32)
+        ctx = Ctx(cfg=self.cfg, positions=positions, quant=quant, decode=True)
+        if extras:
+            ctx.extras.update(extras)
+        if act_shard is not None:
+            ctx.extras["moe_shard"] = act_shard
+        x = shard(cm.embed_lookup(ctx, params["embed"], tokens))
+        for stack in self.stacks:
+            def body(x, xs, stack=stack):
+                p_i, c_i = xs
+                for i, sub in enumerate(stack.subs):
+                    x, c_i[f"sub{i}"] = self._sub_decode(ctx, sub, i, p_i[f"sub{i}"], x, c_i[f"sub{i}"])
+                return shard(x), c_i
+
+            x, cache[stack.name] = jax.lax.scan(body, x, (params[stack.name], cache[stack.name]))
+        logits = self.finish(params, x, ctx)
+        return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, remat: Optional[str]):
+    if remat is None or remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(remat)
+
+
+def _xlstm_prefill(ctx, mixer, p, spec, h, state):
+    """Parallel forward + state rebuild for xLSTM prefill."""
+    if mixer == "mlstm":
+        out = xlstm_mod.mlstm_apply(ctx, p, spec, h)
+        # rebuild final state with the chunk scan (cheap second pass over gates)
+        q, k, v, ig, fg, _ = xlstm_mod._mlstm_qkvif(ctx, p, spec, h)
+        B, S = h.shape[:2]
+        L = min(spec.chunk, S)
+        nc = S // L
+
+        def rs(t):
+            return t.reshape(B, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+        carry = (state["C"], state["n"], state["m"])
+        (C, n, m), _ = jax.lax.scan(xlstm_mod._mlstm_chunk, carry,
+                                    (rs(q), rs(k), rs(v), rs(ig), rs(fg)))
+        return out, {"C": C, "n": n, "m": m}
+    out = xlstm_mod.slstm_apply(ctx, p, spec, h)
+    # sequentially consistent final state via a light scan over gates only
+    z, ig, lf, og = xlstm_mod._slstm_gates(ctx, p, h, spec.d_inner)
+
+    def step(carry, t):
+        c, n, m = carry
+        zt, it, ft = t
+        m_new = jnp.maximum(ft + m, it)
+        fa = jnp.exp(ft + m - m_new)
+        ib = jnp.exp(it - m_new)
+        return (fa * c + ib * zt, fa * n + ib, m_new), None
+
+    (c, n, m), _ = jax.lax.scan(step, (state["c"], state["n"], state["m"]),
+                                (z.swapaxes(0, 1), ig.swapaxes(0, 1), lf.swapaxes(0, 1)))
+    return out, {"c": c, "n": n, "m": m}
+
+
+def _ssm_prefill(ctx, p, spec, h, state):
+    """Mamba prefill: parallel output + final recurrent state."""
+    import jax.numpy as jnp  # local alias for clarity
+
+    B, S, _ = h.shape
+    xz = cm.dense(ctx, p, "in_proj", h)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi_c = jax.nn.silu(ssm_mod._conv_causal(xi, p["conv_w"]))
+    a, b, Cc = ssm_mod._ssm_coeffs(ctx, p, spec, xi_c)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, hs = jax.lax.associative_scan(combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cc.astype(jnp.float32)).astype(h.dtype)
+    y = (y + p["D"] * xi_c) * jax.nn.silu(z)
+    out = cm.dense(ctx, p, "out_proj", y)
+    K = spec.d_conv - 1
+    new_state = {"h": hs[:, -1], "conv": xi[:, S - K:].astype(state["conv"].dtype)}
+    return out, new_state

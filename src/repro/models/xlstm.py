@@ -1,0 +1,243 @@
+"""xLSTM blocks (mLSTM matrix-memory + sLSTM scalar-memory).
+
+Adaptations recorded in DESIGN.md:
+* mLSTM training uses the *chunkwise-parallel* form (intra-chunk
+  quadratic + inter-chunk recurrent state via lax.scan) — the TPU-native
+  equivalent of the paper's CUDA kernels, and what makes prefill_32k /
+  long_500k sub-quadratic in memory.
+* sLSTM is implemented without hidden-to-gate recurrence (R = 0) so it
+  trains with two associative scans (max-plus for the stabilizer, then a
+  first-order linear recurrence); decode is the exact recurrent form.
+* Decode state is O(1) in sequence length: (heads, hd, hd) matrix memory
+  per mLSTM block — this is why xlstm runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import Ctx
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMSpec:
+    d_model: int
+    n_heads: int
+    expansion: float = 2.0
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.expansion)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, spec: XLSTMSpec):
+    ks = jax.random.split(key, 7)
+    d, di = spec.d_model, spec.d_inner
+    return {
+        "in_proj": cm.dense_init(ks[0], d, 2 * di),  # (x branch, z gate branch)
+        "wq": cm.dense_init(ks[1], di, di),
+        "wk": cm.dense_init(ks[2], di, di),
+        "wv": cm.dense_init(ks[3], di, di),
+        "w_if": cm.dense_init(ks[4], di, 2 * spec.n_heads),  # input & forget gate pre-acts
+        "out_norm": cm.rmsnorm_init(spec.head_dim),
+        "out_proj": cm.dense_init(ks[5], di, d),
+    }
+
+
+def _mlstm_qkvif(ctx: Ctx, p, spec: XLSTMSpec, x: Array):
+    B, S, _ = x.shape
+    H, hd = spec.n_heads, spec.head_dim
+    xz = cm.dense(ctx, p, "in_proj", x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = cm.dense(ctx, p, "wq", xi).reshape(B, S, H, hd)
+    k = cm.dense(ctx, p, "wk", xi).reshape(B, S, H, hd) / jnp.sqrt(hd)
+    v = cm.dense(ctx, p, "wv", xi).reshape(B, S, H, hd)
+    gif = cm.dense(ctx, p, "w_if", xi).astype(jnp.float32)
+    ig, fg = jnp.split(gif.reshape(B, S, 2, H), 2, axis=2)
+    return q, k, v, ig[:, :, 0], fg[:, :, 0], z  # gates (B,S,H)
+
+
+def _chunk_state_init(B: int, H: int, hd: int):
+    return (
+        jnp.zeros((B, H, hd, hd), jnp.float32),  # C
+        jnp.zeros((B, H, hd), jnp.float32),  # n
+        jnp.full((B, H), -1e30, jnp.float32),  # m (running stabilizer)
+    )
+
+
+def _mlstm_chunk(carry, inp):
+    """One chunk of the chunkwise-parallel mLSTM. Shapes per chunk L."""
+    C, n, m = carry
+    q, k, v, ig, fg = inp  # q/k/v (B,L,H,hd), gates (B,L,H)
+    B, L, H, hd = q.shape
+    lf = jax.nn.log_sigmoid(fg)  # (B,L,H)
+    F = jnp.cumsum(lf, axis=1)  # inclusive cumulative log-forget
+    G = F[:, -1]  # (B,H) total chunk decay
+    # intra-chunk pair weights: w_ij = F_i - F_j + i_j  (j <= i)
+    wij = F[:, :, None, :] - F[:, None, :, :] + ig[:, None, :, :]  # (B,i,j,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+    wij = jnp.where(causal, wij, -jnp.inf)
+    # state contribution weight at step i: F_i + m_prev
+    w_state = F + m[:, None, :]  # (B,L,H)
+    m_loc = jnp.maximum(jnp.max(wij, axis=2), w_state)  # (B,L,H)
+    m_i = jnp.maximum(m_loc, -1e30)
+    dmat = jnp.exp(wij - m_i[:, :, None, :])  # (B,i,j,H)
+    s = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32), k.astype(jnp.float32))
+    sv = jnp.einsum("bijh,bjhd->bihd", s * dmat, v.astype(jnp.float32))
+    sn = jnp.einsum("bijh,bjhd->bihd", dmat, k.astype(jnp.float32))
+    w_st = jnp.exp(w_state - m_i)  # (B,L,H)
+    # C is stored v-major: C[d,e] = v_d k_e, so q contracts the k index (e)
+    inter = jnp.einsum("bihe,bhde->bihd", q.astype(jnp.float32), C) * w_st[..., None]
+    inter_n = n[:, None] * w_st[..., None]  # (B,L,H,hd)
+    num = sv + inter
+    den = jnp.einsum("bihd,bihd->bih", q.astype(jnp.float32), sn + inter_n)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+    h = num / den[..., None]  # (B,L,H,hd)
+    # ---- state update to chunk end ----
+    m_new = jnp.maximum(G + m, jnp.max(G[:, None] - F + ig, axis=1))  # (B,H)
+    wj = jnp.exp(G[:, None] - F + ig - m_new[:, None])  # (B,L,H)
+    C_new = jnp.exp(G + m - m_new)[..., None, None] * C + jnp.einsum(
+        "bjhd,bjhe->bhde", v.astype(jnp.float32) * wj[..., None], k.astype(jnp.float32))
+    n_new = jnp.exp(G + m - m_new)[..., None] * n + jnp.sum(
+        k.astype(jnp.float32) * wj[..., None], axis=1)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_apply(ctx: Ctx, p, spec: XLSTMSpec, x: Array) -> Array:
+    B, S, _ = x.shape
+    H, hd = spec.n_heads, spec.head_dim
+    L = min(spec.chunk, S)
+    assert S % L == 0, (S, L)
+    q, k, v, ig, fg, z = _mlstm_qkvif(ctx, p, spec, x)
+
+    def rs(t):  # (B,S,...) -> (nc, B, L, ...)
+        return t.reshape(B, S // L, L, *t.shape[2:]).swapaxes(0, 1)
+
+    carry = _chunk_state_init(B, H, hd)
+    _, hs = jax.lax.scan(_mlstm_chunk, carry, (rs(q), rs(k), rs(v), rs(ig), rs(fg)))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, hd).astype(x.dtype)
+    h = cm.rmsnorm(p["out_norm"], h).reshape(B, S, H * hd)
+    h = h * jax.nn.silu(z)
+    return cm.dense(ctx, p, "out_proj", h)
+
+
+def mlstm_init_cache(spec: XLSTMSpec, batch: int):
+    C, n, m = _chunk_state_init(batch, spec.n_heads, spec.head_dim)
+    return {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(ctx: Ctx, p, spec: XLSTMSpec, x: Array, cache) -> tuple[Array, dict]:
+    """Exact recurrent step. x: (B,1,d)."""
+    B = x.shape[0]
+    H, hd = spec.n_heads, spec.head_dim
+    q, k, v, ig, fg, z = _mlstm_qkvif(ctx, p, spec, x)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # (B,H,hd)
+    ig, fg = ig[:, 0], fg[:, 0]  # (B,H)
+    lf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(lf + cache["m"], ig)
+    a = jnp.exp(lf + cache["m"] - m_new)
+    b = jnp.exp(ig - m_new)
+    C = a[..., None, None] * cache["C"] + jnp.einsum("bhd,bhe->bhde", v * b[..., None], k)
+    n = a[..., None] * cache["n"] + k * b[..., None]
+    # C[d,e] = v_d k_e: retrieval contracts q with the k index (e)
+    num = jnp.einsum("bhe,bhde->bhd", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(x.dtype)
+    h = cm.rmsnorm(p["out_norm"], h).reshape(B, 1, H * hd)
+    h = h * jax.nn.silu(z)
+    return cm.dense(ctx, p, "out_proj", h), {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (R = 0 variant; see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, spec: XLSTMSpec):
+    ks = jax.random.split(key, 3)
+    d, di = spec.d_model, spec.d_inner
+    return {
+        "w_in": cm.dense_init(ks[0], d, 4 * di),  # z, i~, f~, o pre-acts
+        "out_norm": cm.rmsnorm_init(spec.head_dim),
+        "out_proj": cm.dense_init(ks[1], di, d),
+    }
+
+
+def _slstm_gates(ctx: Ctx, p, x: Array, di: int):
+    pre = cm.dense(ctx, p, "w_in", x)
+    z, ig, fg, og = jnp.split(pre, 4, axis=-1)
+    return (jnp.tanh(z).astype(jnp.float32), ig.astype(jnp.float32),
+            jax.nn.log_sigmoid(fg.astype(jnp.float32)), jax.nn.sigmoid(og))
+
+
+def slstm_apply(ctx: Ctx, p, spec: XLSTMSpec, x: Array) -> Array:
+    B, S, _ = x.shape
+    di = spec.d_inner
+    z, ig, lf, og = _slstm_gates(ctx, p, x, di)
+    # stabilizer: m_t = max(lf_t + m_{t-1}, ig_t) — max-plus associative scan.
+    # Each step is the map f(m) = max(m + a, b); composition of (a1,b1)
+    # then (a2,b2) is max(m + a1+a2, max(b1+a2, b2)), which is associative.
+    def compose(l, r):
+        al, bl = l
+        ar, br = r
+        return al + ar, jnp.maximum(bl + ar, br)
+
+    a0 = lf  # (B,S,di)
+    b0 = ig
+    acc_a, acc_b = jax.lax.associative_scan(compose, (a0, b0), axis=1)
+    m0 = jnp.full((B, 1, di), -1e30, jnp.float32)
+    m = jnp.maximum(m0 + acc_a, acc_b)  # (B,S,di)
+    m_prev = jnp.concatenate([m0, m[:, :-1]], axis=1)
+    # linear recurrences for c and n with per-step coefficients
+    fa = jnp.exp(lf + m_prev - m)
+    ib = jnp.exp(ig - m)
+
+    def lin(lc, rc):
+        al, bl = lc
+        ar, br = rc
+        return al * ar, br + ar * bl
+
+    _, c = jax.lax.associative_scan(lin, (fa, ib * z), axis=1)
+    _, n = jax.lax.associative_scan(lin, (fa, ib), axis=1)
+    h = og * (c / jnp.maximum(n, 1e-6)).astype(x.dtype)
+    H, hd = spec.n_heads, spec.head_dim
+    h = cm.rmsnorm(p["out_norm"], h.reshape(B, S, H, hd)).reshape(B, S, di)
+    return cm.dense(ctx, p, "out_proj", h)
+
+
+def slstm_init_cache(spec: XLSTMSpec, batch: int):
+    return {
+        "c": jnp.zeros((batch, spec.d_inner), jnp.float32),
+        "n": jnp.zeros((batch, spec.d_inner), jnp.float32),
+        "m": jnp.full((batch, spec.d_inner), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(ctx: Ctx, p, spec: XLSTMSpec, x: Array, cache) -> tuple[Array, dict]:
+    B = x.shape[0]
+    z, ig, lf, og = _slstm_gates(ctx, p, x, spec.d_inner)
+    z, ig, lf, og = z[:, 0], ig[:, 0], lf[:, 0], og[:, 0]
+    m_new = jnp.maximum(lf + cache["m"], ig)
+    fa = jnp.exp(lf + cache["m"] - m_new)
+    ib = jnp.exp(ig - m_new)
+    c = fa * cache["c"] + ib * z
+    n = fa * cache["n"] + ib
+    h = og * (c / jnp.maximum(n, 1e-6)).astype(x.dtype)
+    H, hd = spec.n_heads, spec.head_dim
+    h = cm.rmsnorm(p["out_norm"], h.reshape(B, H, hd)).reshape(B, 1, spec.d_inner)
+    return cm.dense(ctx, p, "out_proj", h), {"c": c, "n": n, "m": m_new}

@@ -1,0 +1,2 @@
+from . import adam  # noqa: F401
+from .adam import AdamConfig, cosine_schedule  # noqa: F401

@@ -1,0 +1,79 @@
+"""Adam/AdamW built on raw pytrees (no optax in this environment).
+
+Used by (a) the BRECQ reconstruction inner loop (paper: Adam, lr 1e-3 on
+rounding logits, 4e-5 on activation step sizes) and (b) the pretraining
+driver. Supports per-leaf learning-rate trees and ZeRO-friendly state
+layout (states mirror the param tree exactly, so the same PartitionSpecs
+apply).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: Union[float, Callable] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = None
+
+
+def init(params: Params) -> dict:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamConfig, grads: Params, state: dict, params: Params,
+           lr_tree: Optional[Params] = None) -> tuple[Params, dict]:
+    """Returns (new_params, new_state). ``lr_tree`` optionally scales the
+    learning rate per leaf (BRECQ uses different lrs for v vs act scales)."""
+    count = state["count"] + 1
+    if cfg.grad_clip is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = cfg.lr(count) if callable(cfg.lr) else cfg.lr
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p, lr_leaf):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        step = lr * lr_leaf * (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + lr * lr_leaf * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+    if lr_tree is None:
+        lr_tree = jax.tree.map(lambda _: 1.0, params)
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params, lr_tree)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = c / jnp.maximum(warmup, 1)
+        t = jnp.clip((c - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * jnp.where(c < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,47 @@
+"""Baseline PTQ methods (paper comparison set) on the tiny trained LM."""
+import numpy as np
+
+from repro.core.baselines import (quantize_adaquant, quantize_bias_correction,
+                                  quantize_lapq, quantize_rtn)
+from repro.core.evaluate import evaluate
+
+
+def test_rtn_bits_ordering(tiny_trained):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    losses = {}
+    for bits in (8, 4, 2):
+        pq, _ = quantize_rtn(model, params, calib, w_bits=bits)
+        losses[bits] = evaluate(model, pq, evalb)["loss"]
+    fp = evaluate(model, params, evalb)["loss"]
+    assert losses[8] <= fp + 0.02
+    assert losses[8] <= losses[4] + 1e-3 <= losses[2] + 1e-2, losses
+
+
+def test_bias_correction_runs_and_helps(tiny_trained):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    pq_rtn, _ = quantize_rtn(model, params, calib, w_bits=3, scale_method="minmax")
+    rtn = evaluate(model, pq_rtn, evalb)["loss"]
+    pq_bc, _ = quantize_bias_correction(model, params, calib, w_bits=3)
+    bc = evaluate(model, pq_bc, evalb)["loss"]
+    assert np.isfinite(bc)
+    # bias correction should not be much worse than plain RTN
+    assert bc <= rtn + 0.1, (rtn, bc)
+
+
+def test_adaquant_runs(tiny_trained):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    pq, _ = quantize_adaquant(model, params, calib[:3], w_bits=4, iters=20)
+    q = evaluate(model, pq, evalb)["loss"]
+    fp = evaluate(model, params, evalb)["loss"]
+    assert np.isfinite(q) and q <= fp + 0.3
+
+
+def test_lapq_runs(tiny_trained):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    pq, _ = quantize_lapq(model, params, calib[:2], w_bits=4,
+                          ratios=(0.7, 0.85, 1.0))
+    q = evaluate(model, pq, evalb)["loss"]
+    pq_mm, _ = quantize_rtn(model, params, calib, w_bits=4, scale_method="minmax")
+    mm = evaluate(model, pq_mm, evalb)["loss"]
+    assert np.isfinite(q)
+    assert q <= mm + 0.05  # loss-aware search should not lose to minmax

@@ -1,0 +1,160 @@
+"""Distribution layer: sharding rules (unit) + multi-device execution
+(subprocess with 8 placeholder devices) + gradient compression."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_subprocess(code: str) -> str:
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "HOME": "/root"}
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def test_param_specs_unit():
+    code = """
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import Plan, pick_strategy
+    from repro.models import get_config
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = get_config("tinyllama_1_1b")
+    plan = Plan(mesh=mesh, strategy="tp", cfg=cfg)
+
+    class K:  # fake DictKey
+        def __init__(self, key): self.key = key
+
+    # column-parallel in-proj: N over model
+    s = plan.param_spec((K("body"), K("sub0"), K("attn"), K("wq"), K("w")), (22, 2048, 2048))
+    assert s[-1] == "model" and s[-2] is None, s
+    # row-parallel out-proj: K over model
+    s = plan.param_spec((K("body"), K("sub0"), K("attn"), K("wo"), K("w")), (22, 2048, 2048))
+    assert s[-2] == "model" and s[-1] is None, s
+    # norms replicate
+    s = plan.param_spec((K("body"), K("sub0"), K("norm1"), K("g")), (22, 2048))
+    assert all(x is None for x in s) or s == P()
+    # MoE experts over model
+    plan_moe = Plan(mesh=mesh, strategy="fsdp", cfg=get_config("qwen3_moe_235b_a22b"))
+    s = plan_moe.param_spec((K("moe"), K("sub0"), K("moe"), K("w_gate"), K("w")), (94, 128, 4096, 1536))
+    assert s[1] == "model" and s[-1] == "data", s
+    # zero3: largest dim over joint axes
+    plan_z = Plan(mesh=mesh, strategy="zero3", cfg=cfg)
+    s = plan_z.param_spec((K("body"), K("sub0"), K("mlp"), K("w_up"), K("w")), (22, 2048, 5632))
+    assert s[-1] == ("data", "model"), s
+    print("unit ok")
+    """
+    assert "unit ok" in run_subprocess(code)
+
+
+def test_tp_train_step_executes():
+    """One real train step on a (4,2) mesh: loss finite, params updated,
+    shardings as planned."""
+    code = """
+    import jax, jax.numpy as jnp
+    from repro.configs.base import ShapeSpec
+    from repro.dist.sharding import Plan
+    from repro.models import get_model
+    from repro.launch import steps as steps_mod
+    from repro.optim import adam
+
+    cfg, model = get_model("tinyllama_1_1b", reduced=True)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    plan = Plan(mesh=mesh, strategy="tp", cfg=cfg)
+    shape = ShapeSpec("t", seq_len=32, global_batch=8, kind="train")
+    low = steps_mod.make_train_step(model, plan, shape, remat="dots")
+    fn = low.jit()
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adam.init(params)
+    import numpy as np
+    batch = {"tokens": jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (8, 32)))}
+    p2, o2, m = fn(params, opt, batch)
+    assert jnp.isfinite(m["loss"]), m
+    l2 = float(fn(p2, o2, batch)[2]["loss"])
+    assert l2 < float(m["loss"]), (float(m["loss"]), l2)
+    print("tp step ok", float(m["loss"]), l2)
+    """
+    assert "tp step ok" in run_subprocess(code)
+
+
+def test_grad_compress_int8_matches_uncompressed():
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models import get_model
+    from repro.optim import adam
+    from repro.optim.grad_compress import init_error, make_dp_train_step
+
+    cfg, model = get_model("brecq_lm_100m", reduced=True)
+    mesh = jax.make_mesh((8,), ("data",))
+    acfg = adam.AdamConfig(lr=1e-3)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adam.init(params)
+    err = init_error(params)
+    step = make_dp_train_step(model, mesh, acfg, remat="none")
+    batch = {"tokens": jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (16, 32)))}
+    losses = []
+    for i in range(8):
+        params, opt, err, loss = step(params, opt, err, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses  # training progresses under int8 AR
+    enorm = sum(float(jnp.sum(jnp.abs(e))) for e in jax.tree.leaves(err))
+    assert enorm > 0  # error feedback active
+    print("compress ok", losses[0], losses[-1])
+    """
+    assert "compress ok" in run_subprocess(code)
+
+
+def test_dryrun_reduced_multi_mesh():
+    """A reduced arch lowers + compiles on a (2,2,2) pod,data,model mesh —
+    the multi-pod path at toy scale."""
+    code = """
+    import jax, jax.numpy as jnp
+    from repro.configs.base import ShapeSpec
+    from repro.dist.sharding import Plan
+    from repro.models import get_model
+    from repro.launch import steps as steps_mod
+
+    cfg, model = get_model("deepseek_moe_16b", reduced=True)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    plan = Plan(mesh=mesh, strategy="tp", cfg=cfg)
+    shape = ShapeSpec("t", seq_len=32, global_batch=8, kind="train")
+    compiled = steps_mod.make_train_step(model, plan, shape, remat="dots").lower().compile()
+    assert compiled.memory_analysis() is not None
+    shape2 = ShapeSpec("d", seq_len=64, global_batch=4, kind="decode")
+    c2 = steps_mod.make_decode_step(model, plan, shape2).lower().compile()
+    print("multi ok")
+    """
+    assert "multi ok" in run_subprocess(code)
+
+
+def test_hlo_analyzer_counts_scan_flops():
+    """The while-aware parser multiplies loop bodies by trip count."""
+    code = """
+    import jax, jax.numpy as jnp
+    from repro.analysis.hlo import analyze_module
+
+    def f(w, x):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    w = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+    txt = jax.jit(f).lower(w, x).compile().as_text()
+    s = analyze_module(txt)
+    expected = 2 * 32 * 128 * 128 * 6
+    assert abs(s.flops - expected) / expected < 0.05, (s.flops, expected)
+    print("hlo ok", s.flops)
+    """
+    assert "hlo ok" in run_subprocess(code)

@@ -1,0 +1,115 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizer import QConfig, init_qstate, quantize_int
+from repro.kernels.fakequant.kernel import fakequant
+from repro.kernels.fakequant.ref import fakequant_ref
+from repro.kernels.kvattn.kernel import kv_decode
+from repro.kernels.kvattn.ops import attend_int8, quantize_kv
+from repro.kernels.kvattn.ref import kv_decode_ref
+from repro.kernels.qmatmul.kernel import qmatmul
+from repro.kernels.qmatmul.ops import QuantizedLinear, pack_weights, qmm
+from repro.kernels.qmatmul.ref import qmatmul_ref
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+@pytest.mark.parametrize("M,K,N,group", [
+    (8, 256, 128, 128),
+    (128, 512, 256, None),
+    (16, 128, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qmatmul_vs_ref(rng, bits, M, K, N, group, dtype):
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    cfg = QConfig(bits=bits, channel_axis=-1, group_size=group)
+    st = init_qstate(w, cfg)
+    codes = quantize_int(w, st, cfg)
+    scales = st.scale.reshape(-1, N)
+    x = jnp.asarray(rng.normal(size=(M, K)), dtype)
+    packed = pack_weights(codes, scales, bits).packed
+    ref = qmatmul_ref(x, packed, scales, bits)
+    out = qmatmul(x, packed, scales, bits=bits,
+                  bm=8 if M <= 16 else 128, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_qmm_wrapper_matches_dense(rng):
+    w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    cfg = QConfig(bits=8, channel_axis=-1)
+    st = init_qstate(w, cfg)
+    codes = quantize_int(w, st, cfg)
+    qw = pack_weights(codes, st.scale.reshape(-1, 128), 8)
+    x = jnp.asarray(rng.normal(size=(4, 8, 256)), jnp.float32)
+    out = qmm(x, qw, backend="pallas")
+    dense = x @ (codes.astype(jnp.float32) * st.scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense), atol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,K,hd,S,bs", [
+    (2, 8, 2, 64, 256, 128),
+    (1, 4, 4, 32, 128, 128),
+    (3, 4, 1, 128, 512, 256),  # MQA
+])
+@pytest.mark.parametrize("window", [None, 64])
+def test_kvattn_vs_ref(rng, B, H, K, hd, S, bs, window):
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    k8, v8, ks, vs = quantize_kv(k, v)
+    kpos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cur = jnp.asarray(rng.integers(S // 4, S, size=(B,)), jnp.int32)
+    ref = kv_decode_ref(q, k8, v8, ks, vs, kpos, cur, window)
+    out = kv_decode(q, k8, v8, ks, vs, kpos, cur, window=window, bs=bs,
+                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_kvattn_int8_vs_fp_reference(rng):
+    """int8 KV quantization error stays small vs full-precision attention."""
+    from repro.models.common import decode_attend
+
+    B, H, K, hd, S = 2, 4, 2, 64, 128
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    kpos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cur = jnp.full((B, 1), S - 1, jnp.int32)
+    fp = decode_attend(q, k, v, kpos, cur)[:, 0]
+    k8, v8, ks, vs = quantize_kv(k, v)
+    q8out = attend_int8(q[:, 0], k8, v8, ks, vs, kpos, cur[:, 0], backend="xla")
+    err = float(jnp.max(jnp.abs(fp - q8out)))
+    assert err < 0.05, err
+
+
+@pytest.mark.parametrize("hard", [False, True])
+@pytest.mark.parametrize("K,N,per_row", [(256, 256, False), (64, 128, True)])
+def test_fakequant_vs_ref(rng, hard, K, N, per_row):
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    srows = K if per_row else 1
+    s = jnp.asarray(rng.uniform(0.01, 0.1, size=(srows, N)), jnp.float32)
+    ref = fakequant_ref(w, v, s, -8, 7, hard)
+    out = fakequant(w, v, s, qmin=-8, qmax=7, hard=hard, bk=64, bn=128,
+                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_fakequant_matches_core_adaround(rng):
+    """Kernel == core.adaround on the shared per-channel symmetric case."""
+    from repro.core import adaround
+    from repro.kernels.fakequant.ops import adaround_forward
+
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    cfg = QConfig(bits=4, channel_axis=-1)
+    st = init_qstate(w, cfg)
+    v = adaround.init_v(w, st, cfg)
+    for hard in (False, True):
+        core = (adaround.hard_quant if hard else adaround.soft_quant)(w, v, st, cfg)
+        kern = adaround_forward(w, v, st, cfg, hard=hard, backend="pallas")
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(core), atol=1e-5)

@@ -1,0 +1,94 @@
+"""Sensitivity table + genetic-algorithm mixed precision (paper Sec 3.4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ReconConfig, quantize
+from repro.core.mixed_precision import (GAConfig, TPUCostModel, fitness,
+                                        genetic_search, model_bytes,
+                                        pareto_sweep)
+from repro.core.sensitivity import SensTable, measure
+
+
+def toy_table(n_layers=6, seed=0):
+    rng = np.random.default_rng(seed)
+    shapes = {f"body.{i}/sub0/mlp/w_up": (64, 64) for i in range(n_layers)}
+    diag = {}
+    for i, p in enumerate(shapes):
+        base = rng.uniform(0.5, 2.0) * (1 + i)  # deeper layers more sensitive
+        diag[(p, 2)] = base
+        diag[(p, 4)] = base * 0.1
+        diag[(p, 8)] = base * 0.01
+    offdiag = {}
+    return SensTable(diag=diag, offdiag=offdiag,
+                     block_of={p: i for i, p in enumerate(shapes)},
+                     shapes=shapes)
+
+
+def test_ga_respects_constraint():
+    sens = toy_table()
+    cost = lambda a: model_bytes(sens.shapes, a)
+    full8 = model_bytes(sens.shapes, {p: 8 for p in sens.shapes})
+    delta = full8 * 0.5
+    assign, info = genetic_search(sens, cost, delta, GAConfig(iters=30))
+    assert info["cost"] <= delta
+    assert set(assign.values()) <= {2, 4, 8}
+
+
+def test_ga_allocates_high_bits_to_sensitive_layers():
+    sens = toy_table()
+    cost = lambda a: model_bytes(sens.shapes, a)
+    full8 = model_bytes(sens.shapes, {p: 8 for p in sens.shapes})
+    assign, _ = genetic_search(sens, cost, full8 * 0.55, GAConfig(iters=60, seed=1))
+    paths = sorted(sens.shapes, key=lambda p: sens.diag[(p, 2)])
+    # least sensitive layer should get <= bits of the most sensitive
+    assert assign[paths[0]] <= assign[paths[-1]]
+
+
+def test_pareto_monotone():
+    sens = toy_table()
+    cost = lambda a: model_bytes(sens.shapes, a)
+    full8 = model_bytes(sens.shapes, {p: 8 for p in sens.shapes})
+    sweep = pareto_sweep(sens, cost, [full8 * f for f in (0.3, 0.6, 1.0)],
+                         GAConfig(iters=40))
+    fits = [s["fitness"] for s in sweep]
+    assert fits[0] >= fits[1] >= fits[2], fits  # looser budget -> better fitness
+
+
+def test_cost_model_monotone_in_bits():
+    # decode-like regime (few tokens): weight streaming dominates, so
+    # latency scales with bits; at high token counts compute dominates
+    cm = TPUCostModel(tokens_per_step=32)
+    shape = (4096, 4096)
+    lat = [cm.layer_latency_s(shape, b) for b in (2, 4, 8)]
+    assert lat[0] <= lat[1] <= lat[2]
+    assert lat[2] / lat[0] > 2.0  # memory-bound: ~4x between W2 and W8
+    cm_big = TPUCostModel(tokens_per_step=1 << 20)
+    lat_big = [cm_big.layer_latency_s(shape, b) for b in (2, 4, 8)]
+    assert abs(lat_big[2] / lat_big[0] - 1.0) < 0.2  # compute-bound: flat
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_ga_fitness_history_non_increasing(seed):
+    sens = toy_table(seed=seed)
+    cost = lambda a: model_bytes(sens.shapes, a)
+    full8 = model_bytes(sens.shapes, {p: 8 for p in sens.shapes})
+    _, info = genetic_search(sens, cost, full8 * 0.6,
+                             GAConfig(iters=25, seed=seed))
+    h = info["history"]
+    assert all(h[i + 1] <= h[i] + 1e-9 for i in range(len(h) - 1))
+
+
+def test_sensitivity_measure_end_to_end(tiny_trained):
+    cfg, model, params, calib, _, _ = tiny_trained
+    results = {b: quantize(model, params, calib[:2],
+                           ReconConfig(w_bits=b, iters=8, calib_bs=4))
+               for b in (2, 4)}
+    sens = measure(model, params, calib[:2], results, bits_options=(2, 4),
+                   n_samples=8)
+    assert len(sens.diag) > 0 and len(sens.shapes) > 0
+    # 2-bit quantization hurts more than 4-bit for every layer
+    for p in sens.shapes:
+        assert sens.diag[(p, 2)] >= sens.diag[(p, 4)] - 1e-9
+    assert len(sens.offdiag) > 0  # intra-block pairs exist

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on quantizer invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adaround
+from repro.core.lsq import lsq_quant
+from repro.core.quantizer import (QConfig, init_qstate, pack_int,
+                                  quantize_dequant, unpack_int)
+
+floats = st.floats(min_value=-100.0, max_value=100.0,
+                   allow_nan=False, allow_infinity=False, width=32)
+
+
+@st.composite
+def weight_matrix(draw, max_dim=16):
+    r = draw(st.integers(2, max_dim))
+    c = draw(st.integers(1, max_dim))
+    data = draw(st.lists(floats, min_size=r * c, max_size=r * c))
+    return np.asarray(data, np.float32).reshape(r, c)
+
+
+@given(w=weight_matrix(), bits=st.sampled_from([2, 3, 4, 8]))
+@settings(max_examples=40, deadline=None)
+def test_qdq_idempotent(w, bits):
+    """Quantizing an already-quantized tensor is the identity."""
+    w = jnp.asarray(w)
+    cfg = QConfig(bits=bits, channel_axis=-1)
+    stq = init_qstate(w, cfg)
+    wq = quantize_dequant(w, stq, cfg)
+    wqq = quantize_dequant(wq, stq, cfg)
+    np.testing.assert_allclose(np.asarray(wq), np.asarray(wqq), atol=1e-5, rtol=1e-5)
+
+
+@given(w=weight_matrix(), bits=st.sampled_from([2, 4, 8]))
+@settings(max_examples=40, deadline=None)
+def test_qdq_on_grid(w, bits):
+    """Every fake-quantized value lies on the scale grid."""
+    w = jnp.asarray(w)
+    cfg = QConfig(bits=bits)
+    stq = init_qstate(w, cfg)
+    wq = np.asarray(quantize_dequant(w, stq, cfg))
+    scale = float(stq.scale.reshape(-1)[0])
+    codes = wq / scale
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+    assert codes.min() >= cfg.qmin - 1e-3 and codes.max() <= cfg.qmax + 1e-3
+
+
+@given(bits=st.sampled_from([2, 4, 8]),
+       rows=st.integers(1, 8).map(lambda k: k * 8),
+       cols=st.integers(1, 16),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_identity(bits, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jnp.asarray(rng.integers(lo, hi + 1, size=(rows, cols)), jnp.int8)
+    back = unpack_int(pack_int(q, bits), bits, rows)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+@given(w=weight_matrix(), bits=st.sampled_from([2, 4]))
+@settings(max_examples=30, deadline=None)
+def test_adaround_init_invariants(w, bits):
+    """AdaRound init (Nagel et al. Sec 3): h(v_init) = frac, so the SOFT
+    forward reproduces the FP weight (within the clip range) and the
+    HARDENED forward reproduces round-to-nearest."""
+    w = jnp.asarray(w)
+    cfg = QConfig(bits=bits, channel_axis=-1)
+    stq = init_qstate(w, cfg)
+    v = adaround.init_v(w, stq, cfg)
+    soft = np.asarray(adaround.soft_quant(w, v, stq, cfg))
+    hard = np.asarray(adaround.hard_quant(w, v, stq, cfg))
+    rtn = np.asarray(quantize_dequant(w, stq, cfg))
+    tol = float(stq.scale.max()) * 1e-2 + 1e-6
+    # soft == identity inside the clip range
+    lo = cfg.qmin * np.asarray(stq.scale)
+    hi = cfg.qmax * np.asarray(stq.scale)
+    inside = (np.asarray(w) >= lo) & (np.asarray(w) <= hi)
+    np.testing.assert_allclose(soft[inside], np.asarray(w)[inside], atol=tol)
+    # hard == RTN everywhere (up to exact .5 midpoints: round-half cases)
+    frac = np.asarray(w / stq.scale - jnp.floor(w / stq.scale))
+    not_midpoint = np.abs(frac - 0.5) > 1e-3
+    np.testing.assert_allclose(hard[not_midpoint], rtn[not_midpoint], atol=tol)
+
+
+@given(w=weight_matrix(), bits=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_adaround_hard_on_grid(w, bits, seed):
+    """Hardened AdaRound output is on the quantizer grid for any v."""
+    w = jnp.asarray(w)
+    rng = np.random.default_rng(seed)
+    cfg = QConfig(bits=bits)
+    stq = init_qstate(w, cfg)
+    v = jnp.asarray(rng.normal(size=w.shape), jnp.float32)
+    hard = np.asarray(adaround.hard_quant(w, v, stq, cfg))
+    scale = float(stq.scale.reshape(-1)[0])
+    codes = hard / scale
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+
+@given(x=weight_matrix(), bits=st.sampled_from([4, 8]),
+       s=st.floats(min_value=1e-3, max_value=2.0))
+@settings(max_examples=30, deadline=None)
+def test_lsq_output_on_grid(x, bits, s):
+    x = jnp.asarray(x)
+    s = jnp.asarray(s, jnp.float32)
+    out = np.asarray(lsq_quant(x, s, bits, True))
+    codes = out / float(s)
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-2)

@@ -1,0 +1,88 @@
+"""Unit tests for the uniform quantizer primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizer import (QConfig, fake_quant_ste, init_qstate,
+                                  pack_int, quantize_dequant, quantize_int,
+                                  unpack_int)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("channel_axis", [None, -1])
+def test_qdq_error_bound(rng, bits, channel_axis):
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    cfg = QConfig(bits=bits, channel_axis=channel_axis)
+    st = init_qstate(w, cfg)
+    wq = quantize_dequant(w, st, cfg)
+    # within the clip range error <= scale/2; minmax symmetric never clips
+    # by more than one step at the negative extreme
+    err = jnp.abs(wq - w)
+    assert float(jnp.max(err)) <= float(jnp.max(st.scale)) * 1.01
+
+
+def test_mse_beats_or_matches_minmax(rng):
+    w = jnp.asarray(rng.standard_t(df=2, size=(128, 64)), jnp.float32)  # heavy tails
+    for ca in (None, -1):
+        mm = QConfig(bits=4, channel_axis=ca, scale_method="minmax")
+        ms = QConfig(bits=4, channel_axis=ca, scale_method="mse")
+        e_mm = float(jnp.sum((quantize_dequant(w, init_qstate(w, mm), mm) - w) ** 2))
+        e_ms = float(jnp.sum((quantize_dequant(w, init_qstate(w, ms), ms) - w) ** 2))
+        assert e_ms <= e_mm * 1.001
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_group_scales_shapes(rng, bits):
+    w = jnp.asarray(rng.normal(size=(256, 32)), jnp.float32)
+    cfg = QConfig(bits=bits, group_size=64)
+    st = init_qstate(w, cfg)
+    assert st.scale.shape == (4, 1, 32)
+    wq = quantize_dequant(w, st, cfg)
+    assert wq.shape == w.shape
+    # grouped quantization is at least as accurate as per-tensor
+    cfg_t = QConfig(bits=bits)
+    e_g = float(jnp.sum((wq - w) ** 2))
+    e_t = float(jnp.sum((quantize_dequant(w, init_qstate(w, cfg_t), cfg_t) - w) ** 2))
+    assert e_g <= e_t * 1.001
+
+
+def test_group_scales_3d_experts(rng):
+    w = jnp.asarray(rng.normal(size=(4, 64, 16)), jnp.float32)  # (E, K, N)
+    cfg = QConfig(bits=4, group_size=32)
+    st = init_qstate(w, cfg)
+    assert st.scale.shape == (4, 2, 1, 16)
+    assert quantize_dequant(w, st, cfg).shape == w.shape
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("shape", [(64, 16), (4, 64, 16)])
+def test_pack_unpack_roundtrip(rng, bits, shape):
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jnp.asarray(rng.integers(lo, hi + 1, size=shape), jnp.int8)
+    axis = len(shape) - 2
+    p = pack_int(q, bits, axis=axis)
+    per = 8 // bits
+    assert p.shape[axis] == shape[axis] // per
+    back = unpack_int(p, bits, shape[axis], axis=axis)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_ste_gradient_masks_clipped(rng):
+    w = jnp.asarray([[-10.0, -0.5, 0.0, 0.5, 10.0]], jnp.float32)
+    cfg = QConfig(bits=4)
+    st = init_qstate(jnp.asarray([[1.0]]), cfg)  # scale for range ~[-1,1]
+    g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, st, cfg)))(w)
+    g = np.asarray(g)[0]
+    assert g[0] == 0.0 and g[-1] == 0.0  # clipped
+    assert g[1] == 1.0 and g[2] == 1.0 and g[3] == 1.0  # pass-through
+
+
+def test_asymmetric_quantizer(rng):
+    x = jnp.asarray(rng.uniform(0.0, 5.0, size=(32, 32)), jnp.float32)
+    cfg = QConfig(bits=4, symmetric=False)
+    st = init_qstate(x, cfg)
+    xq = quantize_dequant(x, st, cfg)
+    assert float(jnp.max(jnp.abs(xq - x))) <= float(st.scale.max()) * 0.51
+    codes = quantize_int(x, st, cfg)
+    assert int(codes.min()) >= 0

@@ -1,0 +1,104 @@
+"""BRECQ engine integration tests on a tiny trained LM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ReconConfig, quantize
+from repro.core.baselines import quantize_rtn
+from repro.core.evaluate import evaluate
+from repro.core.reconstruction import Walker, enumerate_weights
+
+
+def test_walker_matches_scan_forward(tiny_trained):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    walker = Walker(model)
+    batch = calib[0]
+    logits_scan, _ = model.forward(params, batch, remat="none")
+    logits_walk = walker.run(params, batch)
+    np.testing.assert_allclose(np.asarray(logits_walk), np.asarray(logits_scan),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_enumerate_weights_paths(tiny_trained):
+    cfg, model, params, calib, _, _ = tiny_trained
+    weights = enumerate_weights(model, params, calib[0])
+    assert "embed/table" in weights
+    assert any(p.endswith("attn/wq") for p in weights)
+    assert any(p.endswith("mlp/w_down") for p in weights)
+    # all block weights carry the stack.index prefix
+    blocked = [p for p in weights if "." in p.split("/")[0]]
+    assert len(blocked) == 4 * 7  # 4 blocks x (4 attn + 3 mlp) linears
+
+
+def test_brecq_w4_near_fp(tiny_trained):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    fp = evaluate(model, params, evalb)
+    rc = ReconConfig(w_bits=4, iters=60, calib_bs=8)
+    res = quantize(model, params, calib, rc)
+    q = evaluate(model, res.params_q, evalb)
+    assert q["loss"] <= fp["loss"] + 0.05, (fp, q)
+    assert res.stats["n_units"] == 4
+    # reconstruction loss decreased within units
+    for u in res.stats["units"]:
+        if "loss_first" in u and u["loss_first"]:
+            assert u["loss_last"] <= u["loss_first"] * 1.5
+
+
+def test_brecq_beats_rtn_at_w2(tiny_trained):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    pq_rtn, _ = quantize_rtn(model, params, calib, w_bits=2)
+    rtn = evaluate(model, pq_rtn, evalb)
+    rc = ReconConfig(w_bits=2, iters=120, calib_bs=8)
+    res = quantize(model, params, calib, rc)
+    brecq = evaluate(model, res.params_q, evalb)
+    assert brecq["loss"] <= rtn["loss"] + 1e-3, (rtn, brecq)
+
+
+@pytest.mark.parametrize("granularity", ["layer", "block", "stage", "net"])
+def test_granularities_run(tiny_trained, granularity):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    rc = ReconConfig(w_bits=3, iters=15, calib_bs=4, granularity=granularity)
+    res = quantize(model, params, calib[:2], rc)
+    q = evaluate(model, res.params_q, evalb[:1])
+    assert np.isfinite(q["loss"])
+    expected_units = {"layer": 4, "block": 4, "stage": 4, "net": 1}[granularity]
+    assert res.stats["n_units"] == expected_units
+
+
+def test_activation_quant_path(tiny_trained):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    rc = ReconConfig(w_bits=4, a_bits=8, iters=30, calib_bs=4)
+    res = quantize(model, params, calib[:3], rc)
+    assert res.act_scales, "no activation scales learned"
+    q = evaluate(model, res.params_q, evalb, res.act_scales, a_bits=8)
+    fp = evaluate(model, params, evalb)
+    assert q["loss"] <= fp["loss"] + 0.2
+
+
+def test_bake_values_on_grid(tiny_trained):
+    cfg, model, params, calib, _, _ = tiny_trained
+    rc = ReconConfig(w_bits=4, iters=10, calib_bs=4)
+    res = quantize(model, params, calib[:2], rc)
+    # pick one baked block weight and verify it lies on its grid
+    path = next(p for p in res.v if p.endswith("attn/wq"))
+    st, qcfg = res.qstates[path]
+    sname, ri = path.split("/")[0].rsplit(".", 1)
+    node = res.params_q[sname]
+    for k in path.split("/")[1:]:
+        node = node[k]
+    w = np.asarray(node["w"][int(ri)])
+    codes = w / np.asarray(st.scale)
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+
+def test_fisher_weighting_changes_result(tiny_trained):
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    r1 = quantize(model, params, calib[:2],
+                  ReconConfig(w_bits=2, iters=25, use_fisher=True, seed=3))
+    r2 = quantize(model, params, calib[:2],
+                  ReconConfig(w_bits=2, iters=25, use_fisher=False, seed=3))
+    d1 = jax.tree.leaves(r1.params_q)
+    d2 = jax.tree.leaves(r2.params_q)
+    diff = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in zip(d1, d2))
+    assert diff > 0, "Fisher weighting had no effect"

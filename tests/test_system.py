@@ -1,0 +1,59 @@
+"""End-to-end behaviour: the paper's headline claims hold on a tiny LM.
+
+These mirror EXPERIMENTS.md at CI scale: W4 ~ FP; at W2 BRECQ recovers
+accuracy RTN loses; quantized serving produces usable generations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ReconConfig, quantize
+from repro.core.baselines import quantize_rtn
+from repro.core.evaluate import evaluate
+
+
+def test_paper_claims_w4_w2(tiny_trained):
+    cfg, model, params, calib, evalb, train_loss = tiny_trained
+    fp = evaluate(model, params, evalb)
+    assert fp["loss"] < 5.5  # model actually learned something
+
+    # W4: BRECQ within a hair of FP (paper Table 2 behaviour)
+    res4 = quantize(model, params, calib, ReconConfig(w_bits=4, iters=80))
+    q4 = evaluate(model, res4.params_q, evalb)
+    assert q4["loss"] <= fp["loss"] + 0.05
+
+    # W2: RTN degrades; BRECQ recovers a meaningful part of the gap
+    rtn2, _ = quantize_rtn(model, params, calib, w_bits=2)
+    r2 = evaluate(model, rtn2, evalb)
+    res2 = quantize(model, params, calib, ReconConfig(w_bits=2, iters=150))
+    q2 = evaluate(model, res2.params_q, evalb)
+    assert r2["loss"] > fp["loss"]  # damage exists
+    assert q2["loss"] <= r2["loss"] + 1e-3  # BRECQ never worse than RTN
+    assert q2["top1"] >= r2["top1"] - 0.01
+
+
+def test_quantized_generation_runs(tiny_trained):
+    cfg, model, params, calib, _, _ = tiny_trained
+    from repro.dist import deploy
+
+    q = deploy.quantize_tree(params, 4)
+    B, S = 2, 16
+    toks = calib[0]["tokens"][:B, :S]
+    cache = model.init_cache(B, 48, jnp.float32)
+    logits, cache = model.prefill(params, {"tokens": toks}, cache, remat="none")
+    lq, cacheq = model.prefill(q, {"tokens": toks},
+                               model.init_cache(B, 48, jnp.float32), remat="none")
+    # top-1 next-token agreement between FP and W4 serving
+    agree = float(jnp.mean((jnp.argmax(logits, -1) == jnp.argmax(lq, -1)).astype(jnp.float32)))
+    assert agree >= 0.5, agree
+
+
+def test_input_source_variants(tiny_trained):
+    """'quant' (paper), 'fp' and 'mix' (QDrop-ish, beyond paper) all work."""
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    losses = {}
+    for src in ("quant", "fp", "mix"):
+        res = quantize(model, params, calib[:3],
+                       ReconConfig(w_bits=2, iters=40, input_source=src, seed=5))
+        losses[src] = evaluate(model, res.params_q, evalb[:1])["loss"]
+    assert all(np.isfinite(v) for v in losses.values()), losses
