@@ -23,7 +23,7 @@ def main() -> list[dict]:
         ev = evaluate(model, res["params_q"], evalb)
         rows.append({
             "name": f"{gran}_w2",
-            "us_per_call": res["stats"].get("calib_wall_s", 0) * 1e6,
+            "us_per_call": res["stats"]["calib_wall_s"] * 1e6,
             "derived": f"loss={ev['loss']:.4f};top1={ev['top1']:.4f}",
             "loss": ev["loss"], "top1": ev["top1"],
         })

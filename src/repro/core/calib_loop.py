@@ -1,0 +1,351 @@
+"""Device-resident calibration inner loop + compiled-unit program cache.
+
+The BRECQ reconstruction loop used to be host-driven: one ``np.random``
+draw, two jitted dispatches (grad then Adam) and a blocking
+``float(loss)`` sync *per iteration*, with every unit re-tracing its
+step functions from scratch.  This module replaces that with:
+
+  * one jitted **program per unit structure** — the whole optimization
+    (minibatch sampling, value_and_grad, Adam update, beta schedule) runs
+    as a single ``jax.lax.scan`` over iterations, entirely on device;
+  * **on-device sampling** via ``jax.random`` (fold_in per unit, split
+    per iteration), so no host round-trip per minibatch;
+  * the loss trajectory returned as one ``(iters,)`` array → exactly one
+    host↔device sync per unit;
+  * a **compiled-unit cache**: programs are keyed by the *structure* of
+    the unit (block stack defs, canonical quantizer configs, ReconConfig
+    statics, argument shapes) — never by the block index.  The 2nd..Nth
+    identical transformer blocks therefore reuse the compiled step
+    instead of re-tracing, which dominates wall time at bench scale
+    where ``iters`` is small.
+
+Paths are *canonicalised* inside a program: block ``j`` of a unit runs
+under scope ``u{j}`` regardless of its absolute position in the model,
+so ``body.0/attn/wq`` and ``body.5/attn/wq`` trace to the identical
+jaxpr.  Callers translate between real and canonical paths at the
+boundary.
+
+A ``step`` (single-iteration) variant of every program is kept for the
+``loop_impl='python'`` reference mode: it executes the *same* traced
+step body once per Python-level iteration (the pre-optimization
+dispatch pattern), which is what ``benchmarks/table5_calib_speed.py``
+reports as the "before" throughput and what the equivalence tests
+compare against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.common import NO_QUANT
+from ..optim import adam
+from . import adaround, lsq
+from .hooks import AdaRoundHook
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# cache plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class UnitPrograms:
+    """Compiled entry points for one unit structure.
+
+    ``model_ref`` is a weakref: the cache must not pin models alive, and
+    it doubles as the identity guard against id() reuse after GC.
+    ``walker_cell`` holds a weakref to the *latest* Walker (one exists
+    per quantize() call); ``get_unit_programs`` refreshes it on every
+    fetch so a program traced lazily on a later call sees a live
+    walker."""
+
+    scan: Callable  # full fused loop: one dispatch per unit
+    step: Callable  # single iteration (reference / python mode)
+    hard: Callable  # hardened forward over the full calib set
+    fwd: Callable  # FP forward over the full calib set
+    model_ref: Any
+    walker_cell: list
+
+
+@dataclasses.dataclass
+class LayerPrograms:
+    scan: Callable
+    step: Callable
+
+
+_CACHE: dict[tuple, Any] = {}
+_TRACE_LOG: list[str] = []  # appended at trace time; tests assert on it
+_HITS = {"unit": 0, "layer": 0}
+_MISSES = {"unit": 0, "layer": 0}
+
+
+def cache_stats() -> dict:
+    return {"unit_hits": _HITS["unit"], "unit_misses": _MISSES["unit"],
+            "layer_hits": _HITS["layer"], "layer_misses": _MISSES["layer"],
+            "entries": len(_CACHE), "traces": len(_TRACE_LOG)}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _TRACE_LOG.clear()
+    for d in (_HITS, _MISSES):
+        d["unit"] = d["layer"] = 0
+
+
+def trace_log() -> list[str]:
+    return list(_TRACE_LOG)
+
+
+def _tree_sig(tree) -> tuple:
+    """Hashable (treedef, shapes, dtypes) signature of a pytree.
+
+    Accepts arrays or anything shape/dtype-shaped (ShapeDtypeStruct), so
+    callers can build signatures without materializing data."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (str(treedef),
+            tuple((tuple(getattr(l, "shape", ())), str(getattr(l, "dtype", type(l).__name__)))
+                  for l in leaves))
+
+
+def _rc_sig(rc, bs: int) -> tuple:
+    return (rc.iters, bs, rc.lr_v, rc.lr_s, rc.lam, rc.beta,
+            rc.input_source, rc.input_mix_prob, rc.a_bits)
+
+
+def _donate(*argnums: int) -> tuple:
+    # buffer donation is a no-op (and warns) on CPU; only request it where
+    # the runtime can honour it.
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
+# ---------------------------------------------------------------------------
+# unit programs (block / stage / net granularity)
+# ---------------------------------------------------------------------------
+
+
+def unit_cache_key(model, stackdefs, is_dec, cfg_items, rc, bs,
+                   bparams, states, opt, data) -> tuple:
+    # the opt treedef (via _tree_sig) already encodes which v/s paths
+    # the programs optimize, so canonical path lists need no extra slot
+    return ("unit", id(model), tuple(stackdefs), is_dec, tuple(cfg_items),
+            _rc_sig(rc, bs), _tree_sig(bparams),
+            _tree_sig(states), _tree_sig(opt), _tree_sig(data))
+
+
+def get_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
+                      rc, bs: int, N: int,
+                      bparams, states, opt, data) -> UnitPrograms:
+    """Fetch (or build) the compiled programs for one unit structure.
+
+    ``cfgs``: canonical path -> QConfig (static). ``states``/``opt`` are
+    only used for their structure in the cache key; ``data`` is the tuple
+    of stream arrays the programs will consume.
+    """
+    key = unit_cache_key(model, stackdefs, is_dec, sorted(cfgs.items()),
+                         rc, bs, bparams, states, opt, data)
+    hit = _CACHE.get(key)
+    if hit is not None and hit.model_ref() is model:
+        hit.walker_cell[0] = weakref.ref(walker)
+        _HITS["unit"] += 1
+        return hit
+    _MISSES["unit"] += 1
+    # sweep entries whose model died: they can never hit again and only
+    # pin compiled executables
+    for k in [k for k, v in _CACHE.items()
+              if isinstance(v, UnitPrograms) and v.model_ref() is None]:
+        del _CACHE[k]
+    progs = _build_unit_programs(model, walker, stackdefs, is_dec, cfgs,
+                                 rc, bs, N)
+    _CACHE[key] = progs
+    return progs
+
+
+def _build_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
+                         rc, bs: int, N: int) -> UnitPrograms:
+    rep_bi = walker.enc_n if is_dec else 0
+    a_bits = rc.a_bits
+    lr_ratio = rc.lr_s / rc.lr_v
+    acfg = adam.AdamConfig(lr=rc.lr_v)
+    stackdefs = tuple(stackdefs)
+    # weakrefs, dereferenced only at trace time: the cache (and the jit
+    # wrappers it holds) must not keep models/walkers alive. Tracing
+    # only happens while a quantize() call is fetching this entry, so
+    # the refreshed walker_cell and the guarded model are always live.
+    model_ref = weakref.ref(model)
+    walker_cell = [weakref.ref(walker)]
+
+    def apply_unit(hook, bparams, x, batch, mem):
+        mdl, wkr = model_ref(), walker_cell[0]()
+        ctx = wkr.ctx_for(batch, rep_bi, mem)
+        for j, (sd, p_j) in enumerate(zip(stackdefs, bparams)):
+            ctx2 = dataclasses.replace(ctx, quant=hook, scope=f"u{j}")
+            x, _ = mdl.apply_block(ctx2, sd, p_j, x)
+        return x
+
+    def qstates_of(states):
+        return {p: (states[p], cfgs[p]) for p in cfgs}
+
+    def unit_loss(opt_, qstates, bparams, xin, zt, g2b, batch, mem, it, nelem):
+        hook = AdaRoundHook(qstates, opt_, a_bits, soft=True)
+        x = apply_unit(hook, bparams, xin, batch, mem)
+        err = (x - zt).astype(jnp.float32) ** 2
+        if g2b is not None:
+            err = err * g2b
+        beta, enabled = rc.beta(it, rc.iters)
+        reg = sum(adaround.round_reg(v, beta) for v in opt_["v"].values())
+        return jnp.mean(err) + rc.lam * enabled * reg / nelem
+
+    def one_step(carry, it, bparams, states, x_q, x_fp, z_fp, g2, batch, mem):
+        opt_, ostate, key = carry
+        key, k_idx, k_mix = jax.random.split(key, 3)
+        idx = jax.random.choice(k_idx, N, shape=(bs,), replace=False)
+        if rc.input_source == "fp":
+            xin = x_fp[idx]
+        elif rc.input_source == "mix":
+            keep = jax.random.uniform(k_mix, (bs,)) < rc.input_mix_prob
+            xin = jnp.where(keep[:, None, None], x_fp[idx], x_q[idx])
+        else:
+            xin = x_q[idx]
+        g2b = g2[idx] if g2 is not None else None
+        bsl = {k: v[idx] for k, v in batch.items()}
+        msl = mem[idx] if mem is not None else None
+        nelem = sum(v.size for v in opt_["v"].values())
+        lr_tree = {"v": {p: 1.0 for p in opt_["v"]},
+                   "s": {p: lr_ratio for p in opt_["s"]}}
+        loss, grads = jax.value_and_grad(unit_loss)(
+            opt_, qstates_of(states), bparams, xin, z_fp[idx], g2b, bsl, msl,
+            it.astype(jnp.float32), nelem)
+        opt_, ostate = adam.update(acfg, grads, ostate, opt_, lr_tree)
+        return (opt_, ostate, key), loss
+
+    def scan_program(bparams, states, opt_, ostate, key,
+                     x_q, x_fp, z_fp, g2, batch, mem):
+        _TRACE_LOG.append("unit_scan")
+        carry, losses = jax.lax.scan(
+            lambda c, it: one_step(c, it, bparams, states, x_q, x_fp, z_fp,
+                                   g2, batch, mem),
+            (opt_, ostate, key), jnp.arange(rc.iters, dtype=jnp.int32))
+        opt_, ostate, _ = carry
+        return opt_, ostate, losses
+
+    def step_program(bparams, states, opt_, ostate, key, it,
+                     x_q, x_fp, z_fp, g2, batch, mem):
+        _TRACE_LOG.append("unit_step")
+        carry, loss = one_step((opt_, ostate, key), it, bparams, states,
+                               x_q, x_fp, z_fp, g2, batch, mem)
+        return (*carry, loss)
+
+    def hard_program(bparams, states, opt_, x, batch, mem):
+        _TRACE_LOG.append("unit_hard")
+        hook = AdaRoundHook(qstates_of(states), opt_, a_bits, soft=False)
+        return apply_unit(hook, bparams, x, batch, mem)
+
+    def fwd_program(bparams, x, batch, mem):
+        _TRACE_LOG.append("unit_fwd")
+        return apply_unit(NO_QUANT, bparams, x, batch, mem)
+
+    return UnitPrograms(
+        scan=jax.jit(scan_program, donate_argnums=_donate(2, 3)),
+        step=jax.jit(step_program, donate_argnums=_donate(2, 3)),
+        hard=jax.jit(hard_program),
+        fwd=jax.jit(fwd_program),
+        model_ref=model_ref, walker_cell=walker_cell)
+
+
+def run_unit_loop(progs: UnitPrograms, rc, bparams, states, opt, ostate, key,
+                  x_q, x_fp, z_fp, g2, batch, mem):
+    """Drive the optimization; returns (opt, losses ndarray) with O(1)
+    syncs in scan mode (one device fetch for the whole trajectory)."""
+    if rc.loop_impl == "python":
+        # pre-optimization dispatch pattern: per-iteration host round trip
+        losses = []
+        for it in range(rc.iters):
+            opt, ostate, key, l = progs.step(
+                bparams, states, opt, ostate, key,
+                jnp.asarray(it, jnp.int32), x_q, x_fp, z_fp, g2, batch, mem)
+            losses.append(float(l))
+        return opt, np.asarray(losses, np.float64)
+    opt, ostate, losses = progs.scan(bparams, states, opt, ostate, key,
+                                     x_q, x_fp, z_fp, g2, batch, mem)
+    return opt, np.asarray(losses)  # the single sync for the trajectory
+
+
+# ---------------------------------------------------------------------------
+# layer programs (per-linear AdaRound baseline)
+# ---------------------------------------------------------------------------
+
+
+def get_layer_programs(qc, rc, bs: int, lead: int, W, st, opt, xin, zt
+                       ) -> LayerPrograms:
+    key = ("layer", qc, _rc_sig(rc, bs), lead, _tree_sig((W, st, opt, xin, zt)))
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _HITS["layer"] += 1
+        return hit
+    _MISSES["layer"] += 1
+    progs = _build_layer_programs(qc, rc, bs, lead)
+    _CACHE[key] = progs
+    return progs
+
+
+def _build_layer_programs(qc, rc, bs: int, lead: int) -> LayerPrograms:
+    a_bits = rc.a_bits
+    acfg = adam.AdamConfig(lr=rc.lr_v)
+    lr_ratio = rc.lr_s / rc.lr_v
+
+    def layer_loss(opt_, W, st, xb, zb, it):
+        w_q = adaround.soft_quant(W, opt_["v"], st, qc)
+        x = xb
+        if a_bits is not None:
+            x = lsq.lsq_quant(x, opt_["s"], a_bits, True)
+        z = jnp.matmul(x, w_q.astype(x.dtype))
+        beta, enabled = rc.beta(it, rc.iters)
+        reg = adaround.round_reg(opt_["v"], beta)
+        return (jnp.mean((z - zb).astype(jnp.float32) ** 2)
+                + rc.lam * enabled * reg / opt_["v"].size)
+
+    def one_step(carry, it, W, st, xin, zt):
+        opt_, ostate, key = carry
+        key, k_idx = jax.random.split(key)
+        idx = jax.random.choice(k_idx, lead, shape=(bs,), replace=False)
+        lr_tree = {"v": 1.0, **({"s": lr_ratio} if "s" in opt_ else {})}
+        loss, grads = jax.value_and_grad(layer_loss)(
+            opt_, W, st, xin[idx], zt[idx], it.astype(jnp.float32))
+        opt_, ostate = adam.update(acfg, grads, ostate, opt_, lr_tree)
+        return (opt_, ostate, key), loss
+
+    def scan_program(W, st, opt_, ostate, key, xin, zt):
+        _TRACE_LOG.append("layer_scan")
+        carry, losses = jax.lax.scan(
+            lambda c, it: one_step(c, it, W, st, xin, zt),
+            (opt_, ostate, key), jnp.arange(rc.iters, dtype=jnp.int32))
+        opt_, ostate, _ = carry
+        return opt_, ostate, losses
+
+    def step_program(W, st, opt_, ostate, key, it, xin, zt):
+        _TRACE_LOG.append("layer_step")
+        carry, loss = one_step((opt_, ostate, key), it, W, st, xin, zt)
+        return (*carry, loss)
+
+    return LayerPrograms(
+        scan=jax.jit(scan_program, donate_argnums=_donate(2, 3)),
+        step=jax.jit(step_program, donate_argnums=_donate(2, 3)))
+
+
+def run_layer_loop(progs: LayerPrograms, rc, W, st, opt, ostate, key, xin, zt):
+    if rc.loop_impl == "python":
+        losses = []
+        for it in range(rc.iters):
+            opt, ostate, key, l = progs.step(
+                W, st, opt, ostate, key, jnp.asarray(it, jnp.int32), xin, zt)
+            losses.append(float(l))
+        return opt, np.asarray(losses, np.float64)
+    opt, ostate, losses = progs.scan(W, st, opt, ostate, key, xin, zt)
+    return opt, np.asarray(losses)

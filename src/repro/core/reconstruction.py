@@ -26,13 +26,12 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..models.common import NO_QUANT, Ctx, QuantHook
 from ..optim import adam
-from . import adaround, lsq
+from . import adaround, calib_loop, lsq
 from .adaround import BetaSchedule
-from .hooks import AdaRoundHook, RecordingHook, RTNHook
+from .hooks import RecordingHook, RTNHook
 from .quantizer import QConfig, QState, init_qstate, quantize_dequant
 
 Array = jax.Array
@@ -159,6 +158,10 @@ class ReconConfig:
     input_mix_prob: float = 0.5  # QDrop-style mixing (beyond paper)
     per_layer_bits: Optional[dict] = None  # path -> bits (mixed precision)
     seed: int = 0
+    # 'scan': fused device-resident loop (one dispatch + one sync per
+    # unit); 'python': same traced step driven one iteration at a time
+    # (reference mode, used for equivalence tests and table5's baseline).
+    loop_impl: str = "scan"
 
 
 @dataclasses.dataclass
@@ -255,12 +258,14 @@ def _segments(walker: Walker) -> list[list[int]]:
 
 def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQResult:
     """Run BRECQ calibration; returns hard-quantized params + act scales."""
+    if rc.loop_impl not in ("scan", "python"):
+        raise ValueError(f"loop_impl must be 'scan' or 'python', got {rc.loop_impl!r}")
     t0 = time.time()
     walker = Walker(model)
     nb = len(walker.blocks())
     calib = _concat_batches(calib_batches)
-    N = calib["tokens"].shape[0]
-    rng = np.random.default_rng(rc.seed)
+    base_key = jax.random.PRNGKey(rc.seed)
+    cache0 = calib_loop.cache_stats()
 
     probe = _slice_batch(calib, jnp.arange(1))
     weights = enumerate_weights(model, params, probe)
@@ -292,15 +297,16 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
     s_all: dict[str, Array] = {}
     stats = {"units": [], "granularity": rc.granularity}
 
-    for unit in units:
+    for ui, unit in enumerate(units):
+        unit_key = jax.random.fold_in(base_key, ui)
         if rc.granularity == "layer":
             x_fp, x_q, v_u, s_u, ustat = _reconstruct_layerwise(
                 model, walker, params, weights, calib, unit[0], x_fp, x_q,
-                mem_fp, mem_q, qstates, rc, rng)
+                mem_fp, mem_q, qstates, rc, unit_key)
         else:
             x_fp, x_q, v_u, s_u, ustat = _reconstruct_unit(
                 model, walker, params, weights, calib, unit, x_fp, x_q,
-                mem_fp, mem_q, fisher, qstates, rc, rng)
+                mem_fp, mem_q, fisher, qstates, rc, unit_key)
         v_all.update(v_u)
         s_all.update(s_u)
         stats["units"].append(ustat)
@@ -310,8 +316,19 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
             mem_q, x_q = walker.boundary_transition(params, calib, x_q, q_stem_hook)
 
     params_q = bake(model, params, qstates, v_all, embed_head)
-    stats.update(wall_s=time.time() - t0, n_units=len(units),
-                 n_weights=len(qstates))
+    cache1 = calib_loop.cache_stats()
+    opt_iters = sum(u.get("opt_iters", 0) for u in stats["units"])
+    opt_wall = sum(u.get("opt_wall_s", 0.0) for u in stats["units"])
+    stats.update(
+        calib_wall_s=time.time() - t0, n_units=len(units),
+        n_weights=len(qstates), loop_impl=rc.loop_impl,
+        calib_iters_per_s=opt_iters / max(opt_wall, 1e-9),
+        unit_cache={"hits": cache1["unit_hits"] - cache0["unit_hits"],
+                    "misses": cache1["unit_misses"] - cache0["unit_misses"]})
+    if rc.granularity == "layer":
+        stats["layer_cache"] = {
+            "hits": cache1["layer_hits"] - cache0["layer_hits"],
+            "misses": cache1["layer_misses"] - cache0["layer_misses"]}
     all_states = dict(qstates)
     all_states.update(embed_head)
     return PTQResult(params_q=params_q, act_scales=s_all, qstates=all_states,
@@ -343,72 +360,101 @@ def _apply_unit(walker, params, unit, hook, x, batch, memory):
 # ---------------------------------------------------------------------------
 
 
+def _unit_canon(walker, unit: list[int]):
+    """Canonical naming for a unit: block ``j`` runs under scope ``u{j}``
+    regardless of its absolute index, so structurally identical units
+    trace to the same jaxpr and share one compiled program."""
+    prefixes = [(j, walker.block_path(bi) + "/") for j, bi in enumerate(unit)]
+
+    def canon(p: str) -> str:
+        for j, pref in prefixes:
+            if p.startswith(pref):
+                return f"u{j}/" + p[len(pref):]
+        raise KeyError(f"path {p} not inside unit {unit}")
+
+    return canon
+
+
+def _unit_pieces(walker, params, unit: list[int]):
+    """(bparams, stackdefs, is_dec) — the traced/static per-unit inputs."""
+    bparams = []
+    stackdefs = []
+    for bi in unit:
+        stack, ri = walker.blocks()[bi]
+        bparams.append(jax.tree.map(lambda a: a[ri], params[stack.name]))
+        stackdefs.append(stack)
+    is_dec = bool(walker.encdec and min(unit) >= walker.enc_n)
+    return tuple(bparams), tuple(stackdefs), is_dec
+
+
 def _reconstruct_unit(model, walker, params, weights, calib, unit, x_fp, x_q,
-                      mem_fp, mem_q, fisher, qstates, rc: ReconConfig, rng):
+                      mem_fp, mem_q, fisher, qstates, rc: ReconConfig,
+                      unit_key):
     t0 = time.time()
     N = calib["tokens"].shape[0]
+    unit = sorted(unit)
 
-    # which paths does this unit touch?
+    # which paths does this unit touch? (1-row probe: slice every stream)
     rec = RecordingHook(capture_acts=True)
-    _ = _apply_unit(walker, params, unit, rec, x_q[:1], _slice_batch(calib, jnp.arange(1)), _m1(mem_q))
+    _ = _apply_unit(walker, params, unit, rec, x_q[:1],
+                    _slice_batch(calib, jnp.arange(1)), _m1(mem_q, jnp.arange(1)))
     wpaths = [p for p in rec.weights if p in qstates]
 
-    fp_fn = jax.jit(lambda x, b, m: _apply_unit(walker, params, unit, NO_QUANT, x, b, m))
-    z_fp = fp_fn(x_fp, calib, mem_fp)
+    canon = _unit_canon(walker, unit)
+    bparams, stackdefs, is_dec = _unit_pieces(walker, params, unit)
     g2 = fisher[max(unit)] if rc.use_fisher else None
 
-    if not wpaths:
-        hard0 = jax.jit(lambda x, b, m: _apply_unit(walker, params, unit, NO_QUANT, x, b, m))
-        return z_fp, hard0(x_q, calib, mem_q), {}, {}, {"unit": unit, "skipped": True}
+    c_of = {p: canon(p) for p in wpaths}
+    cfgs = {c_of[p]: qstates[p][1] for p in wpaths}
+    states_c = {c_of[p]: qstates[p][0] for p in wpaths}
+    bs = min(rc.calib_bs, N)
 
-    v0 = {p: adaround.init_v(weights[p], *qstates[p]) for p in wpaths}
+    if not wpaths:  # nothing to optimize: only the forward programs run
+        misses0 = calib_loop.cache_stats()["unit_misses"]
+        progs = calib_loop.get_unit_programs(
+            model, walker, stackdefs, is_dec, {}, rc, bs, N,
+            bparams, {}, {"v": {}, "s": {}}, (x_q, x_fp, g2, calib, mem_q))
+        cache_hit = calib_loop.cache_stats()["unit_misses"] == misses0
+        z_fp = progs.fwd(bparams, x_fp, calib, mem_fp)
+        x_q2 = progs.fwd(bparams, x_q, calib, mem_q)
+        return z_fp, x_q2, {}, {}, {"unit": list(unit), "skipped": True,
+                                    "cache_hit": cache_hit,
+                                    "wall_s": time.time() - t0}
+
+    v0 = {c_of[p]: adaround.init_v(weights[p], *qstates[p]) for p in wpaths}
     s0 = {}
+    act_of = {}
     if rc.a_bits is not None:
         for p, a in rec.acts.items():
-            s0[p] = lsq.init_act_scale(a, rc.a_bits, symmetric=True)
+            act_of[p] = canon(p)
+            s0[act_of[p]] = lsq.init_act_scale(a, rc.a_bits, symmetric=True)
     opt = {"v": v0, "s": s0}
-    lr_tree = {"v": {p: 1.0 for p in v0}, "s": {p: rc.lr_s / rc.lr_v for p in s0}}
-    nelem = sum(v.size for v in v0.values())
 
-    def unit_loss(opt, xin, zt, g2b, batch, mem, it):
-        hook = AdaRoundHook(qstates, opt, rc.a_bits, soft=True)
-        x = _apply_unit(walker, params, unit, hook, xin, batch, mem)
-        err = (x - zt).astype(jnp.float32) ** 2
-        if g2b is not None:
-            err = err * g2b
-        beta, enabled = rc.beta(it, rc.iters)
-        reg = sum(adaround.round_reg(v, beta) for v in opt["v"].values())
-        return jnp.mean(err) + rc.lam * enabled * reg / nelem
+    misses0 = calib_loop.cache_stats()["unit_misses"]
+    progs = calib_loop.get_unit_programs(
+        model, walker, stackdefs, is_dec, cfgs, rc, bs, N,
+        bparams, states_c, opt, (x_q, x_fp, g2, calib, mem_q))
+    cache_hit = calib_loop.cache_stats()["unit_misses"] == misses0
 
-    grad_fn = jax.jit(jax.value_and_grad(unit_loss))
-    acfg = adam.AdamConfig(lr=rc.lr_v)
-    ostate = adam.init(opt)
-    step_fn = jax.jit(lambda o, s, g: adam.update(acfg, g, s, o, lr_tree))
+    z_fp = progs.fwd(bparams, x_fp, calib, mem_fp)
+    t_opt = time.time()
+    opt, losses = calib_loop.run_unit_loop(
+        progs, rc, bparams, states_c, opt, adam.init(opt), unit_key,
+        x_q, x_fp, z_fp, g2, calib, mem_q)
+    opt_wall = time.time() - t_opt
 
-    losses = []
-    for it in range(rc.iters):
-        idx = jnp.asarray(rng.choice(N, size=min(rc.calib_bs, N), replace=False))
-        if rc.input_source == "fp":
-            xin = x_fp[idx]
-        elif rc.input_source == "mix":
-            m = jnp.asarray(rng.random(len(idx)) < rc.input_mix_prob)
-            xin = jnp.where(m[:, None, None], x_fp[idx], x_q[idx])
-        else:
-            xin = x_q[idx]
-        g2b = g2[idx] if g2 is not None else None
-        l, grads = grad_fn(opt, xin, z_fp[idx], g2b, _slice_batch(calib, idx),
-                           _m1(mem_q, idx), jnp.asarray(it, jnp.float32))
-        opt, ostate = step_fn(opt, ostate, grads)
-        losses.append(float(l))
-
-    hard_fn = jax.jit(lambda o, x, b, m: _apply_unit(
-        walker, params, unit, AdaRoundHook(qstates, o, rc.a_bits, soft=False), x, b, m))
-    x_q2 = hard_fn(opt, x_q, calib, mem_q)
+    x_q2 = progs.hard(bparams, states_c, opt, x_q, calib, mem_q)
+    v_real = {p: opt["v"][c_of[p]] for p in wpaths}
+    s_real = {p: opt["s"][c] for p, c in act_of.items()}
     stat = {"unit": list(unit), "paths": len(wpaths), "iters": rc.iters,
-            "loss_first": losses[0], "loss_last": losses[-1],
+            "loss_first": float(losses[0]), "loss_last": float(losses[-1]),
+            "loss_trace": losses,
             "final_recon_mse": float(jnp.mean((x_q2 - z_fp).astype(jnp.float32) ** 2)),
+            "opt_iters": rc.iters, "opt_wall_s": opt_wall,
+            "calib_iters_per_s": rc.iters / max(opt_wall, 1e-9),
+            "cache_hit": cache_hit,
             "wall_s": time.time() - t0}
-    return z_fp, x_q2, opt["v"], opt["s"], stat
+    return z_fp, x_q2, v_real, s_real, stat
 
 
 def _m1(mem, idx=None):
@@ -449,22 +495,45 @@ class _LayerHook(QuantHook):
 
 
 def _reconstruct_layerwise(model, walker, params, weights, calib, bi, x_fp, x_q,
-                           mem_fp, mem_q, qstates, rc: ReconConfig, rng):
-    """AdaRound-style: each linear reconstructs its own output z = x W."""
+                           mem_fp, mem_q, qstates, rc: ReconConfig, unit_key):
+    """AdaRound-style: each linear reconstructs its own output z = x W.
+
+    The per-linear inner loop runs through the cached scan program
+    (:mod:`calib_loop`), so every same-shape linear in the model shares
+    one compiled step. The block forward/harden passes reuse the unit
+    program cache."""
     t0 = time.time()
-    N = calib["tokens"].shape[0]
+    unit = [bi]
     rec = RecordingHook(capture_acts=True)
-    _ = _apply_unit(walker, params, [bi], rec, x_q[:1], _slice_batch(calib, jnp.arange(1)), _m1(mem_q))
+    _ = _apply_unit(walker, params, unit, rec, x_q[:1],
+                    _slice_batch(calib, jnp.arange(1)), _m1(mem_q, jnp.arange(1)))
     wpaths = [p for p in rec.weights if p in qstates]
 
-    fp_fn = jax.jit(lambda x, b, m: _apply_unit(walker, params, [bi], NO_QUANT, x, b, m))
-    z_fp = fp_fn(x_fp, calib, mem_fp)
+    canon = _unit_canon(walker, unit)
+    bparams, stackdefs, is_dec = _unit_pieces(walker, params, unit)
+    c_of = {p: canon(p) for p in wpaths}
+    cfgs = {c_of[p]: qstates[p][1] for p in wpaths}
+    states_c = {c_of[p]: qstates[p][0] for p in wpaths}
+    s_paths = tuple(sorted(c_of.values())) if rc.a_bits is not None else ()
+    # structure-only signature of the opt tree the hard pass will receive
+    hard_opt_sig = {
+        "v": {c_of[p]: jax.ShapeDtypeStruct(weights[p].shape, jnp.float32)
+              for p in wpaths},
+        "s": {c: jax.ShapeDtypeStruct((), jnp.float32) for c in s_paths}}
+
+    misses0 = calib_loop.cache_stats()["unit_misses"]
+    uprogs = calib_loop.get_unit_programs(
+        model, walker, stackdefs, is_dec, cfgs, rc,
+        min(rc.calib_bs, calib["tokens"].shape[0]), calib["tokens"].shape[0],
+        bparams, states_c, hard_opt_sig, (x_q, x_fp, None, calib, mem_q))
+    cache_hit = calib_loop.cache_stats()["unit_misses"] == misses0
+
+    z_fp = uprogs.fwd(bparams, x_fp, calib, mem_fp)
 
     v_done: dict[str, Array] = {}
     s_done: dict[str, Array] = {}
-    acfg = adam.AdamConfig(lr=rc.lr_v)
-
-    for path in wpaths:
+    opt_wall = 0.0
+    for pi, path in enumerate(wpaths):
         W = weights[path]
         st, qc = qstates[path]
 
@@ -475,39 +544,31 @@ def _reconstruct_layerwise(model, walker, params, weights, calib, bi, x_fp, x_q,
                                            {}, dataclasses.replace(rc, a_bits=None),
                                            path, x, calib, m))(x_fp, mem_fp)
         zt = jnp.matmul(xin_fp, W.astype(xin_fp.dtype))
+        opt = {"v": adaround.init_v(W, st, qc)}
         if rc.a_bits is not None:
-            s_done[path] = lsq.init_act_scale(xin_q, rc.a_bits, symmetric=True)
-        v = adaround.init_v(W, st, qc)
-        opt = {"v": {path: v}, "s": ({path: s_done[path]} if rc.a_bits else {})}
-        ostate = adam.init(opt)
-        lr_tree = {"v": {path: 1.0}, "s": {path: rc.lr_s / rc.lr_v} if rc.a_bits else {}}
-
-        def layer_loss(opt, xb, zb, it):
-            w_q = adaround.soft_quant(W, opt["v"][path], st, qc)
-            x = xb
-            if rc.a_bits is not None:
-                x = lsq.lsq_quant(x, opt["s"][path], rc.a_bits, True)
-            z = jnp.matmul(x, w_q.astype(x.dtype))
-            beta, enabled = rc.beta(it, rc.iters)
-            reg = adaround.round_reg(opt["v"][path], beta)
-            return (jnp.mean((z - zb).astype(jnp.float32) ** 2)
-                    + rc.lam * enabled * reg / v.size)
-
-        grad_fn = jax.jit(jax.value_and_grad(layer_loss))
-        step_fn = jax.jit(lambda o, s, g: adam.update(acfg, g, s, o, lr_tree))
+            opt["s"] = lsq.init_act_scale(xin_q, rc.a_bits, symmetric=True)
         lead = xin_q.shape[0]
-        for it in range(rc.iters):
-            idx = jnp.asarray(rng.choice(lead, size=min(rc.calib_bs, lead), replace=False))
-            _, grads = grad_fn(opt, xin_q[idx], zt[idx], jnp.asarray(it, jnp.float32))
-            opt, ostate = step_fn(opt, ostate, grads)
-        v_done[path] = opt["v"][path]
+        bs = min(rc.calib_bs, lead)
+        progs = calib_loop.get_layer_programs(qc, rc, bs, lead, W, st, opt,
+                                              xin_q, zt)
+        t_opt = time.time()
+        opt, _losses = calib_loop.run_layer_loop(
+            progs, rc, W, st, opt, adam.init(opt),
+            jax.random.fold_in(unit_key, pi), xin_q, zt)
+        opt_wall += time.time() - t_opt
+        v_done[path] = opt["v"]
         if rc.a_bits is not None:
-            s_done[path] = opt["s"][path]
+            s_done[path] = opt["s"]
 
-    hard_hook = _LayerHook(qstates, v_done, None, s_done, rc.a_bits)
-    x_q2 = jax.jit(lambda x, m: _apply_unit(walker, params, [bi], hard_hook, x, calib, m))(x_q, mem_q)
+    hard_opt = {"v": {c_of[p]: v for p, v in v_done.items()},
+                "s": {c_of[p]: s for p, s in s_done.items()}}
+    x_q2 = uprogs.hard(bparams, states_c, hard_opt, x_q, calib, mem_q)
+    n_iters = len(wpaths) * rc.iters
     stat = {"unit": [bi], "paths": len(wpaths), "iters": rc.iters,
             "final_recon_mse": float(jnp.mean((x_q2 - z_fp).astype(jnp.float32) ** 2)),
+            "opt_iters": n_iters, "opt_wall_s": opt_wall,
+            "calib_iters_per_s": n_iters / max(opt_wall, 1e-9),
+            "cache_hit": cache_hit,
             "wall_s": time.time() - t0}
     return z_fp, x_q2, v_done, s_done, stat
 

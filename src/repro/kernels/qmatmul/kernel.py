@@ -28,15 +28,26 @@ Array = jax.Array
 
 
 def _unpack_tile(wp: Array, bits: int) -> Array:
-    """(bk/per, bn) int8 -> (bk, bn) f32 centred codes."""
+    """(bk/per, bn) int8 -> (bk, bn) f32 centred codes.
+
+    All integer work stays in int8: the arithmetic right shift
+    sign-extends, but ``& mask`` keeps only the low ``bits`` bits, which
+    match the logical-shift result whenever shift+bits <= 8 — so no
+    widening to int32 and no unsigned view are needed. One broadcasted
+    shift replaces the per-field temporaries + stack, leaving a single
+    reshape to interleave the ``per`` fields along the k axis.
+    """
     if bits == 8:
         return wp.astype(jnp.float32)
     per = 8 // bits
-    mask = (1 << bits) - 1
-    u = wp.astype(jnp.int32) & 0xFF  # unsigned view
-    parts = [((u >> (bits * i)) & mask) - 2 ** (bits - 1) for i in range(per)]
-    stacked = jnp.stack(parts, axis=1)  # (bk/per, per, bn)
-    return stacked.reshape(wp.shape[0] * per, wp.shape[1]).astype(jnp.float32)
+    mask = jnp.int8((1 << bits) - 1)
+    # iota (not a captured constant: Pallas kernels must build arrays
+    # in-kernel) gives the per-field shift amounts 0, bits, 2*bits, ...
+    shifts = (jax.lax.broadcasted_iota(jnp.int32, (1, per, 1), 1)
+              .astype(jnp.int8) * jnp.int8(bits))
+    fields = (wp[:, None, :] >> shifts) & mask  # (bk/per, per, bn)
+    codes = fields.reshape(wp.shape[0] * per, wp.shape[1]) - jnp.int8(2 ** (bits - 1))
+    return codes.astype(jnp.float32)
 
 
 def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):

@@ -45,7 +45,12 @@ def pack_weights(codes: Array, scales, bits: int) -> QuantizedLinear:
 
 
 def qmm(x: Array, qw: QuantizedLinear, *, backend: str = "auto") -> Array:
-    """x: (..., K) -> (..., N)."""
+    """x: (..., K) -> (..., N).
+
+    Ragged M (not a multiple of the 8/128 sublane tile) is zero-padded up
+    to the tile multiple and the output sliced back, instead of degrading
+    to bm=1 — a grid of M single-row MXU calls.
+    """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, qw.k)
     if backend == "auto":
@@ -55,7 +60,12 @@ def qmm(x: Array, qw: QuantizedLinear, *, backend: str = "auto") -> Array:
     else:
         interpret = jax.default_backend() != "tpu"
         m = x2.shape[0]
-        bm = 128 if m % 128 == 0 else (8 if m % 8 == 0 else 1)
+        bm = 128 if m % 128 == 0 else 8
+        pad = (-m) % bm
+        if pad:
+            x2 = jnp.pad(x2, ((0, pad), (0, 0)))
         out = qmatmul(x2, qw.packed, qw.scales, bits=qw.bits, bm=bm,
                       interpret=interpret)
+        if pad:
+            out = out[:m]
     return out.reshape(*lead, -1)

@@ -38,6 +38,40 @@ def test_qmatmul_vs_ref(rng, bits, M, K, N, group, dtype):
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_unpack_tile_matches_unpack_int(rng, bits):
+    """int8 shift/mask unpack == the pure-jnp widening oracle."""
+    from repro.core.quantizer import pack_int, unpack_int
+    from repro.kernels.qmatmul.kernel import _unpack_tile
+
+    K, N = 64, 128
+    codes = jnp.asarray(
+        rng.integers(-(2 ** (bits - 1)), 2 ** (bits - 1), size=(K, N)), jnp.int8)
+    packed = pack_int(codes, bits)
+    got = _unpack_tile(packed, bits)
+    ref = unpack_int(packed, bits, K).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(codes, np.float32))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("M", [3, 13, 130])
+def test_qmm_ragged_m_pads_to_tile(rng, bits, M):
+    """M not a multiple of 8/128 pads up + slices instead of bm=1."""
+    K, N = 256, 128
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    cfg = QConfig(bits=bits, channel_axis=-1)
+    st = init_qstate(w, cfg)
+    codes = quantize_int(w, st, cfg)
+    qw = pack_weights(codes, st.scale.reshape(-1, N), bits)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    out = qmm(x, qw, backend="pallas")
+    ref = qmatmul_ref(x, qw.packed, qw.scales, bits)
+    assert out.shape == (M, N)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
 def test_qmm_wrapper_matches_dense(rng):
     w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
     cfg = QConfig(bits=8, channel_axis=-1)

@@ -1,6 +1,8 @@
 """Sensitivity table + genetic-algorithm mixed precision (paper Sec 3.4)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't break collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ReconConfig, quantize

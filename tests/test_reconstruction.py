@@ -1,10 +1,13 @@
 """BRECQ engine integration tests on a tiny trained LM."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import ReconConfig, quantize
+from repro.core import calib_loop
 from repro.core.baselines import quantize_rtn
 from repro.core.evaluate import evaluate
 from repro.core.reconstruction import Walker, enumerate_weights
@@ -90,6 +93,74 @@ def test_bake_values_on_grid(tiny_trained):
     w = np.asarray(node["w"][int(ri)])
     codes = w / np.asarray(st.scale)
     np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+
+@pytest.fixture(scope="module")
+def two_block():
+    """Untrained 2-block LM: enough for loop-equivalence checks."""
+    from repro.data import Corpus, CorpusConfig, make_batches
+    from repro.models import build_model, get_config
+
+    cfg = dataclasses.replace(get_config("brecq_lm_100m", reduced=True),
+                              n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
+    calib = make_batches(corpus, 3, 8, 64, seed=1, start_step=1000)
+    return model, params, calib
+
+
+@pytest.mark.parametrize("granularity", ["block", "layer"])
+def test_scan_loop_matches_python_loop(two_block, granularity):
+    """Fused lax.scan loop == per-iteration dispatch of the same step:
+    same seed -> same loss trajectory and identical hardened v signs."""
+    model, params, calib = two_block
+    mk = lambda impl: ReconConfig(w_bits=3, iters=25, calib_bs=4,
+                                  granularity=granularity,
+                                  use_fisher=(granularity != "layer"),
+                                  seed=7, loop_impl=impl)
+    res_scan = quantize(model, params, calib, mk("scan"))
+    res_py = quantize(model, params, calib, mk("python"))
+    for us, up in zip(res_scan.stats["units"], res_py.stats["units"]):
+        if "loss_trace" in us:
+            np.testing.assert_allclose(us["loss_trace"], up["loss_trace"],
+                                       rtol=1e-4, atol=1e-6)
+    assert set(res_scan.v) == set(res_py.v)
+    for p in res_scan.v:
+        np.testing.assert_array_equal(np.asarray(res_scan.v[p]) >= 0,
+                                      np.asarray(res_py.v[p]) >= 0,
+                                      err_msg=f"hardened signs differ at {p}")
+
+
+def test_unit_cache_reuses_compiled_step(tiny_trained):
+    """Identical transformer blocks must share one compiled unit program:
+    4 blocks -> 1 trace, 3 cache hits; a re-run traces nothing."""
+    cfg, model, params, calib, _, _ = tiny_trained
+    calib_loop.clear_cache()
+    rc = ReconConfig(w_bits=4, iters=8, calib_bs=4)
+    res = quantize(model, params, calib[:2], rc)
+    assert res.stats["unit_cache"] == {"hits": 3, "misses": 1}, res.stats
+    assert calib_loop.trace_log().count("unit_scan") == 1
+    hits = [u["cache_hit"] for u in res.stats["units"]]
+    assert hits == [False, True, True, True]
+    # identical second run: every unit hits the cache, no new traces
+    n_traces = len(calib_loop.trace_log())
+    res2 = quantize(model, params, calib[:2], rc)
+    assert res2.stats["unit_cache"] == {"hits": 4, "misses": 0}
+    assert len(calib_loop.trace_log()) == n_traces
+
+
+def test_loss_trace_single_fetch(tiny_trained):
+    """The whole trajectory comes back as one array per unit."""
+    cfg, model, params, calib, _, _ = tiny_trained
+    rc = ReconConfig(w_bits=4, iters=12, calib_bs=4)
+    res = quantize(model, params, calib[:2], rc)
+    for u in res.stats["units"]:
+        assert u["loss_trace"].shape == (12,)
+        assert np.all(np.isfinite(u["loss_trace"]))
+        assert u["calib_iters_per_s"] > 0
+    assert res.stats["calib_wall_s"] > 0
+    assert res.stats["calib_iters_per_s"] > 0
 
 
 def test_fisher_weighting_changes_result(tiny_trained):
