@@ -96,8 +96,13 @@ def main() -> list[dict]:
     ev = evaluate(model, res["params_q"], evalb)
     calib_tokens = sum(int(b["tokens"].size) for b in calib)
     brecq_wall = res["stats"]["calib_wall_s"]
+    # .get(): disk-cached runs may predate the memory-plane stats
+    peak_mb = res["stats"].get("calib_peak_bytes", 0) / 1e6
+    fisher_s = res["stats"].get("fisher_wall_s", 0.0)
     rows.append({"name": f"brecq_w{W_BITS}", "us_per_call": brecq_wall * 1e6,
                  "derived": (f"loss={ev['loss']:.4f};wall_s={brecq_wall:.0f};"
+                             f"fisher_wall_s={fisher_s:.0f};"
+                             f"peak_mb={peak_mb:.1f};"
                              f"data_tokens={calib_tokens}")})
 
     pq, wall, tokens = qat_ste(model, params, cfg)

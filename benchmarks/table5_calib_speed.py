@@ -17,6 +17,7 @@ from __future__ import annotations
 import time
 
 from repro.core import ReconConfig, quantize
+from repro.core import fisher
 from repro.core.calib_loop import clear_cache
 
 from .common import RECON_ITERS, emit, get_bench_model
@@ -32,6 +33,7 @@ def main() -> list[dict]:
         ips = {}
         for impl in ("python", "scan"):
             clear_cache()  # cold-start both impls: tracing cost counts
+            fisher.clear_cache()  # incl. the per-block Fisher grad jits
             rc = ReconConfig(w_bits=W_BITS, iters=RECON_ITERS,
                              granularity=gran, use_fisher=(gran != "layer"),
                              loop_impl=impl)
@@ -40,14 +42,19 @@ def main() -> list[dict]:
             wall = time.time() - t0
             ips[impl] = res.stats["calib_iters_per_s"]
             cache = res.stats["unit_cache"]
+            mem = res.stats["calib_peak_bytes_detail"]
             rows.append({
                 "name": f"{gran}_{impl}",
                 "us_per_call": wall * 1e6,
                 "derived": (f"calib_iters_per_s={ips[impl]:.1f};"
                             f"wall_s={res.stats['calib_wall_s']:.1f};"
+                            f"fisher_wall_s={res.stats['fisher_wall_s']:.1f};"
+                            f"peak_mb={res.stats['calib_peak_bytes'] / 1e6:.1f};"
+                            f"fisher_mb={mem['fisher'] / 1e6:.1f};"
                             f"cache_hits={cache['hits']};"
                             f"cache_misses={cache['misses']}"),
                 "calib_iters_per_s": ips[impl],
+                "calib_peak_bytes": res.stats["calib_peak_bytes"],
             })
         rows.append({
             "name": f"{gran}_speedup", "us_per_call": 0,

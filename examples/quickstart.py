@@ -4,10 +4,20 @@
 
 Trains a tiny LM on the synthetic corpus, then compares FP / RTN-W2 /
 BRECQ-W2 perplexity — the paper's headline effect in miniature.
+
+Set QUICKSTART_SMOKE=1 for a reduced run (fewer train steps, fewer
+calibration iterations) — the docs CI job uses this to keep the README's
+advertised flow from rotting without spending minutes of CI time.
 """
+import os
 import time
 
 import jax
+
+SMOKE = os.environ.get("QUICKSTART_SMOKE", "") not in ("", "0")
+TRAIN_STEPS = 40 if SMOKE else 250
+BRECQ_ITERS = 25 if SMOKE else 200
+N_CALIB_BATCHES = 4 if SMOKE else 8
 
 from repro.core import ReconConfig, quantize
 from repro.core.baselines import quantize_rtn
@@ -28,13 +38,13 @@ def main():
     step = jax.jit(lambda p, s, b: (
         *adam.update(acfg, jax.grad(lambda q: model.loss(q, b, remat='none'))(p), s, p),
         model.loss(p, b, remat='none')))
-    for i in range(250):
+    for i in range(TRAIN_STEPS):
         batch = make_batches(corpus, 1, 16, 64, seed=0, start_step=i)[0]
         params, state, loss = step(params, state, batch)
         if i % 50 == 0:
             print(f"  step {i}: loss {float(loss):.3f}")
 
-    calib = make_batches(corpus, 8, 8, 64, seed=1, start_step=1000)
+    calib = make_batches(corpus, N_CALIB_BATCHES, 8, 64, seed=1, start_step=1000)
     evalb = make_batches(corpus, 4, 16, 64, seed=2, start_step=2000)
 
     print("\n== post-training quantization ==")
@@ -46,7 +56,7 @@ def main():
     print(f"  RTN  W2  : ppl {rtn['ppl']:.2f}  top1 {rtn['top1']:.3f}")
 
     t0 = time.time()
-    res = quantize(model, params, calib, ReconConfig(w_bits=2, iters=200))
+    res = quantize(model, params, calib, ReconConfig(w_bits=2, iters=BRECQ_ITERS))
     brecq = evaluate(model, res.params_q, evalb)
     print(f"  BRECQ W2 : ppl {brecq['ppl']:.2f}  top1 {brecq['top1']:.3f} "
           f"(calibrated in {time.time()-t0:.0f}s on "

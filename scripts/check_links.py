@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs CI job. Stdlib only.
+
+    python scripts/check_links.py [FILE_OR_DIR ...]
+
+Defaults to README.md + docs/. For every markdown link it verifies:
+
+* relative file targets exist (resolved against the linking file's
+  directory, with a repo-root fallback so `docs/foo.md` works from the
+  README and vice versa);
+* `#anchor` fragments match a heading in the target file (GitHub-style
+  slugs: lowercase, punctuation stripped, spaces -> dashes);
+* external (http/https/mailto) URLs are only syntax-checked — CI must
+  not flake on the network.
+
+Exits 1 and lists every broken link if any check fails.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"(?<!\!)\[([^\]]*)\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a heading line."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set[str]:
+    # strip code fences first: '# comment' lines in fenced blocks are
+    # not headings and must not mint phantom anchors
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(md_path: Path) -> list[str]:
+    errors = []
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    for m in LINK_RE.finditer(text):
+        label, target = m.group(1), m.group(2)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, frag = target.partition("#")
+        if not target:  # same-file anchor
+            if frag and slugify(frag) not in anchors_of(md_path):
+                errors.append(f"{md_path}: missing anchor #{frag}")
+            continue
+        cand = (md_path.parent / target, ROOT / target)
+        dest = next((c for c in cand if c.exists()), None)
+        if dest is None:
+            errors.append(f"{md_path}: broken link [{label}]({target})")
+            continue
+        if frag and dest.suffix == ".md" and slugify(frag) not in anchors_of(dest):
+            errors.append(f"{md_path}: missing anchor #{frag} in {target}")
+    return errors
+
+
+def collect(args: list[str]) -> list[Path]:
+    paths = [Path(a) for a in args] if args else [ROOT / "README.md", ROOT / "docs"]
+    files = []
+    for p in paths:
+        files += sorted(p.rglob("*.md")) if p.is_dir() else [p]
+    return files
+
+
+def main(argv: list[str]) -> int:
+    files = collect(argv)
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

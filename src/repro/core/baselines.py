@@ -42,7 +42,25 @@ def quantize_rtn(model, params, calib_batches, w_bits: int,
                  a_bits: Optional[int] = None, scale_method: str = "mse",
                  w_group: Optional[int] = None,
                  keep_embed_head_8bit: bool = True):
-    """Round-to-nearest baseline. Activation scales from calibration minmax."""
+    """Round-to-nearest PTQ baseline (no reconstruction).
+
+    Args:
+      model: block-graph model (same API as ``quantize``).
+      params: FP parameters (never mutated).
+      calib_batches: calibration batches; only used for weight
+        enumeration and (when ``a_bits`` is set) minmax activation scales.
+      w_bits: weight bit-width for block weights.
+      a_bits: activation bit-width; ``None`` means weight-only.
+      scale_method: ``'minmax'`` or ``'mse'`` (the paper's OMSE search).
+      w_group: optional per-group weight quantization (rows per group
+        along the reduction axis); ``None`` keeps per-channel scales.
+      keep_embed_head_8bit: keep embedding/head at 8 bits.
+
+    Returns:
+      ``(params_q, act_scales)`` — a params copy with round-to-nearest
+      weights baked in, and path -> activation scale (empty dict when
+      ``a_bits`` is None). Feed both to ``evaluate``.
+    """
     rc = ReconConfig(w_bits=w_bits, a_bits=a_bits, scale_method=scale_method,
                      w_group=w_group, keep_embed_head_8bit=keep_embed_head_8bit)
     calib = _concat_batches(calib_batches)

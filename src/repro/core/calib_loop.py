@@ -45,7 +45,7 @@ import numpy as np
 from ..models.common import NO_QUANT
 from ..optim import adam
 from . import adaround, lsq
-from .hooks import AdaRoundHook
+from .hooks import AdaRoundHook, LayerCaptureHook, RecordingHook
 
 Array = jax.Array
 
@@ -80,15 +80,40 @@ class LayerPrograms:
     step: Callable
 
 
+@dataclasses.dataclass
+class ProbeProgram:
+    """Cached unit probe: which weight paths a unit structure touches
+    (known at trace time, no execution needed) plus a jitted activation
+    capture used only when ``a_bits`` is set."""
+
+    wpaths: tuple  # canonical weight paths in model-traversal order
+    acts: Callable  # jitted (bparams, x1, batch1, mem1) -> {cpath: act}
+    model_ref: Any
+    walker_cell: list
+
+
+@dataclasses.dataclass
+class CaptureProgram:
+    """Cached layer-wise input capture: runs one block under canonical
+    scopes with finished paths hard-quantized and returns the input of
+    the target linear."""
+
+    run: Callable  # (bparams, states_done, v_done, s_done, x, batch, mem)
+    model_ref: Any
+    walker_cell: list
+
+
 _CACHE: dict[tuple, Any] = {}
 _TRACE_LOG: list[str] = []  # appended at trace time; tests assert on it
-_HITS = {"unit": 0, "layer": 0}
-_MISSES = {"unit": 0, "layer": 0}
+_HITS = {"unit": 0, "layer": 0, "probe": 0, "cap": 0}
+_MISSES = {"unit": 0, "layer": 0, "probe": 0, "cap": 0}
 
 
 def cache_stats() -> dict:
     return {"unit_hits": _HITS["unit"], "unit_misses": _MISSES["unit"],
             "layer_hits": _HITS["layer"], "layer_misses": _MISSES["layer"],
+            "probe_hits": _HITS["probe"], "probe_misses": _MISSES["probe"],
+            "cap_hits": _HITS["cap"], "cap_misses": _MISSES["cap"],
             "entries": len(_CACHE), "traces": len(_TRACE_LOG)}
 
 
@@ -96,7 +121,8 @@ def clear_cache() -> None:
     _CACHE.clear()
     _TRACE_LOG.clear()
     for d in (_HITS, _MISSES):
-        d["unit"] = d["layer"] = 0
+        for k in d:
+            d[k] = 0
 
 
 def trace_log() -> list[str]:
@@ -116,13 +142,22 @@ def _tree_sig(tree) -> tuple:
 
 def _rc_sig(rc, bs: int) -> tuple:
     return (rc.iters, bs, rc.lr_v, rc.lr_s, rc.lam, rc.beta,
-            rc.input_source, rc.input_mix_prob, rc.a_bits)
+            rc.input_source, rc.input_mix_prob, rc.a_bits, rc.stream_dtype)
 
 
 def _donate(*argnums: int) -> tuple:
     # buffer donation is a no-op (and warns) on CPU; only request it where
     # the runtime can honour it.
     return argnums if jax.default_backend() != "cpu" else ()
+
+
+def _sweep_dead() -> None:
+    """Drop cache entries whose model died: they can never hit again and
+    only pin compiled executables."""
+    for k in [k for k, v in _CACHE.items()
+              if getattr(v, "model_ref", None) is not None
+              and v.model_ref() is None]:
+        del _CACHE[k]
 
 
 # ---------------------------------------------------------------------------
@@ -156,11 +191,7 @@ def get_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
         _HITS["unit"] += 1
         return hit
     _MISSES["unit"] += 1
-    # sweep entries whose model died: they can never hit again and only
-    # pin compiled executables
-    for k in [k for k, v in _CACHE.items()
-              if isinstance(v, UnitPrograms) and v.model_ref() is None]:
-        del _CACHE[k]
+    _sweep_dead()
     progs = _build_unit_programs(model, walker, stackdefs, is_dec, cfgs,
                                  rc, bs, N)
     _CACHE[key] = progs
@@ -173,6 +204,7 @@ def _build_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
     a_bits = rc.a_bits
     lr_ratio = rc.lr_s / rc.lr_v
     acfg = adam.AdamConfig(lr=rc.lr_v)
+    sdt = jnp.dtype(rc.stream_dtype)  # stream storage dtype; compute is f32
     stackdefs = tuple(stackdefs)
     # weakrefs, dereferenced only at trace time: the cache (and the jit
     # wrappers it holds) must not keep models/walkers alive. Tracing
@@ -183,6 +215,10 @@ def _build_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
 
     def apply_unit(hook, bparams, x, batch, mem):
         mdl, wkr = model_ref(), walker_cell[0]()
+        # streams may be stored bf16 (ReconConfig.stream_dtype); blocks
+        # always compute in f32
+        x = x.astype(jnp.float32)
+        mem = mem.astype(jnp.float32) if mem is not None else None
         ctx = wkr.ctx_for(batch, rep_bi, mem)
         for j, (sd, p_j) in enumerate(zip(stackdefs, bparams)):
             ctx2 = dataclasses.replace(ctx, quant=hook, scope=f"u{j}")
@@ -245,11 +281,11 @@ def _build_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
     def hard_program(bparams, states, opt_, x, batch, mem):
         _TRACE_LOG.append("unit_hard")
         hook = AdaRoundHook(qstates_of(states), opt_, a_bits, soft=False)
-        return apply_unit(hook, bparams, x, batch, mem)
+        return apply_unit(hook, bparams, x, batch, mem).astype(sdt)
 
     def fwd_program(bparams, x, batch, mem):
         _TRACE_LOG.append("unit_fwd")
-        return apply_unit(NO_QUANT, bparams, x, batch, mem)
+        return apply_unit(NO_QUANT, bparams, x, batch, mem).astype(sdt)
 
     return UnitPrograms(
         scan=jax.jit(scan_program, donate_argnums=_donate(2, 3)),
@@ -278,6 +314,121 @@ def run_unit_loop(progs: UnitPrograms, rc, bparams, states, opt, ostate, key,
 
 
 # ---------------------------------------------------------------------------
+# unit probe cache (weight-path discovery + activation capture)
+# ---------------------------------------------------------------------------
+
+
+def get_unit_probe(model, walker, stackdefs, is_dec, bparams,
+                   x1, batch1, mem1) -> ProbeProgram:
+    """Fetch (or build) the probe for one unit structure.
+
+    The probe replaces the former eager 1-row ``RecordingHook`` forward
+    that ran per unit: weight paths are discovered **at trace time** via
+    ``jax.eval_shape`` (no device execution), and the activation capture
+    is a jitted program shared by every structurally identical unit —
+    only executed when activation quantization needs real values.
+    Returned paths are canonical (``u{j}/...``); callers map them back to
+    real block paths.
+    """
+    stackdefs = tuple(stackdefs)
+    key = ("probe", id(model), stackdefs, is_dec,
+           _tree_sig((bparams, x1, batch1, mem1)))
+    hit = _CACHE.get(key)
+    if hit is not None and hit.model_ref() is model:
+        hit.walker_cell[0] = weakref.ref(walker)
+        _HITS["probe"] += 1
+        return hit
+    _MISSES["probe"] += 1
+    _sweep_dead()
+    probe = _build_unit_probe(model, walker, stackdefs, is_dec,
+                              bparams, x1, batch1, mem1)
+    _CACHE[key] = probe
+    return probe
+
+
+def _build_unit_probe(model, walker, stackdefs, is_dec,
+                      bparams, x1, batch1, mem1) -> ProbeProgram:
+    _TRACE_LOG.append("unit_probe")
+    rep_bi = walker.enc_n if is_dec else 0
+    model_ref = weakref.ref(model)
+    walker_cell = [weakref.ref(walker)]
+    wcell: dict[str, tuple] = {}
+
+    def probe_fn(bparams, x, batch, mem):
+        mdl, wkr = model_ref(), walker_cell[0]()
+        rec = RecordingHook(capture_acts=True)
+        x = x.astype(jnp.float32)
+        mem = mem.astype(jnp.float32) if mem is not None else None
+        ctx = wkr.ctx_for(batch, rep_bi, mem)
+        for j, (sd, p_j) in enumerate(zip(stackdefs, bparams)):
+            ctx2 = dataclasses.replace(ctx, quant=rec, scope=f"u{j}")
+            x, _ = mdl.apply_block(ctx2, sd, p_j, x)
+        wcell["wpaths"] = tuple(rec.weights)
+        return dict(rec.acts)
+
+    # abstract trace: fills wpaths without compiling or executing anything
+    jax.eval_shape(probe_fn, bparams, x1, batch1, mem1)
+    return ProbeProgram(wpaths=wcell["wpaths"], acts=jax.jit(probe_fn),
+                        model_ref=model_ref, walker_cell=walker_cell)
+
+
+# ---------------------------------------------------------------------------
+# layer-wise input-capture cache
+# ---------------------------------------------------------------------------
+
+
+def get_capture_program(model, walker, stackdefs, is_dec, target: str,
+                        cfg_items, a_bits, rc, data) -> CaptureProgram:
+    """Fetch (or build) the capture program for one (block structure,
+    target linear, finished-path set) combination.
+
+    Replaces the fresh ``jax.jit`` the layer-wise loop used to build per
+    linear per block: with canonical paths, block ``k``'s j-th linear
+    reuses block 0's compiled capture. ``cfg_items``: (canonical path,
+    QConfig) for the already-finished paths (static); ``data`` is the
+    argument tuple, used only for its shape/dtype signature.
+    """
+    stackdefs = tuple(stackdefs)
+    key = ("cap", id(model), stackdefs, is_dec, target, tuple(cfg_items),
+           a_bits, rc.stream_dtype, _tree_sig(data))
+    hit = _CACHE.get(key)
+    if hit is not None and hit.model_ref() is model:
+        hit.walker_cell[0] = weakref.ref(walker)
+        _HITS["cap"] += 1
+        return hit
+    _MISSES["cap"] += 1
+    _sweep_dead()
+    prog = _build_capture_program(model, walker, stackdefs, is_dec, target,
+                                  dict(cfg_items), a_bits, rc)
+    _CACHE[key] = prog
+    return prog
+
+
+def _build_capture_program(model, walker, stackdefs, is_dec, target: str,
+                           cfgd: dict, a_bits, rc) -> CaptureProgram:
+    rep_bi = walker.enc_n if is_dec else 0
+    sdt = jnp.dtype(rc.stream_dtype)
+    model_ref = weakref.ref(model)
+    walker_cell = [weakref.ref(walker)]
+
+    def cap_program(bparams, states_done, v_done, s_done, x, batch, mem):
+        _TRACE_LOG.append("layer_cap")
+        mdl, wkr = model_ref(), walker_cell[0]()
+        qst = {p: (states_done[p], cfgd[p]) for p in cfgd}
+        hook = LayerCaptureHook(qst, v_done, target, s_done, a_bits)
+        x = x.astype(jnp.float32)
+        mem = mem.astype(jnp.float32) if mem is not None else None
+        ctx = wkr.ctx_for(batch, rep_bi, mem)
+        for j, (sd, p_j) in enumerate(zip(stackdefs, bparams)):
+            ctx2 = dataclasses.replace(ctx, quant=hook, scope=f"u{j}")
+            x, _ = mdl.apply_block(ctx2, sd, p_j, x)
+        return hook.captured.astype(sdt)
+
+    return CaptureProgram(run=jax.jit(cap_program), model_ref=model_ref,
+                          walker_cell=walker_cell)
+
+
+# ---------------------------------------------------------------------------
 # layer programs (per-linear AdaRound baseline)
 # ---------------------------------------------------------------------------
 
@@ -302,7 +453,7 @@ def _build_layer_programs(qc, rc, bs: int, lead: int) -> LayerPrograms:
 
     def layer_loss(opt_, W, st, xb, zb, it):
         w_q = adaround.soft_quant(W, opt_["v"], st, qc)
-        x = xb
+        x = xb.astype(jnp.float32)  # captures may be stored bf16
         if a_bits is not None:
             x = lsq.lsq_quant(x, opt_["s"], a_bits, True)
         z = jnp.matmul(x, w_q.astype(x.dtype))

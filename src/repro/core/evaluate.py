@@ -18,7 +18,23 @@ from .reconstruction import Walker
 
 def evaluate(model, params, batches: list[dict], act_scales: Optional[dict] = None,
              a_bits: Optional[int] = None) -> dict:
-    """Returns {'loss', 'ppl', 'top1'} averaged over eval batches."""
+    """Evaluate a (possibly quantized) model on next-token prediction.
+
+    Args:
+      model: block-graph model (same API ``quantize`` consumes).
+      params: parameters to evaluate — FP originals or the baked
+        ``PTQResult.params_q``.
+      batches: eval batches, each with ``tokens`` of shape (B, S).
+      act_scales: path -> LSQ step size from calibration; together with
+        ``a_bits`` enables activation fake-quant at serve time. Pass both
+        or neither.
+      a_bits: activation bit-width matching ``act_scales``.
+
+    Returns:
+      dict with ``loss`` (mean next-token cross-entropy, nats),
+      ``ppl`` (exp(loss)) and ``top1`` (next-token accuracy in [0, 1]),
+      averaged over ``batches``.
+    """
     walker = Walker(model)
     hook = ServeHook(act_scales, a_bits) if (act_scales and a_bits) else NO_QUANT
 

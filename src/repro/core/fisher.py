@@ -2,18 +2,187 @@
 
 BRECQ Sec. 3.3: the pre-activation Hessian of each reconstruction unit is
 approximated by the diagonal FIM, whose entries are the squared gradients
-of the task loss w.r.t. the unit's output. We capture them for *all*
-blocks in one backward pass with the epsilon trick: add a zero
-perturbation at every block output; d(loss)/d(eps) is exactly dL/dz.
+of the task loss w.r.t. the unit's output, evaluated per calibration
+sample. Gradients come from the epsilon trick: add a zero perturbation at
+a block output; d(loss)/d(eps) is exactly dL/dz.
+
+Two residency modes (:class:`FisherStream`):
+
+* ``mode='stream'`` (default) — g^2 is computed **per block, on demand**,
+  chunked over the calibration batches: one backward per (block, batch),
+  each batch's squared gradient cast to ``dtype`` (bf16 by default)
+  immediately, with the normalising mean reduced in f32. Peak residency
+  is one block's ``(N, S, d)`` array regardless of model depth, at the
+  cost of one extra backward per reconstruction unit.
+* ``mode='full'`` — the reference behaviour: one backward per batch
+  captures *all* block outputs at once (a single eps per block), keeping
+  ``nb x N x S x d`` f32 resident for the whole calibration run. Kept for
+  parity tests and for granularities that consume every block anyway.
+
+See ``docs/memory.md`` for the full calibration memory model.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+import time
+import weakref
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+# jitted per-block grad programs, keyed by (model id, block, shapes) so
+# repeated quantize() calls on the same model never re-trace. Guarded by
+# a model weakref like the calib_loop caches.
+_GRAD_CACHE: dict[tuple, Any] = {}
+
+
+def clear_cache() -> None:
+    _GRAD_CACHE.clear()
+
+
+def _batch_sig(batch: dict) -> tuple:
+    return tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                        for k, v in batch.items()))
+
+
+class FisherStream:
+    """Per-block diagonal-Fisher provider with bounded residency.
+
+    Args:
+      walker: a ``reconstruction.Walker`` over the FP model.
+      params: FP parameters (never mutated).
+      calib_batches: list of calibration batches; g^2 is computed batch by
+        batch and concatenated along the leading (sample) axis.
+      mode: ``'stream'`` (per-block on demand) or ``'full'`` (all blocks
+        upfront, f32 — the seed behaviour).
+      dtype: storage dtype for streamed g^2 (``'full'`` always keeps f32).
+
+    Attributes:
+      wall_s: cumulative seconds spent in Fisher computation.
+      peak_bytes: estimated peak residency in bytes — one block's array in
+        ``'stream'`` mode, the sum of all blocks in ``'full'`` mode.
+    """
+
+    def __init__(self, walker, params, calib_batches: list[dict],
+                 mode: str = "stream", dtype=jnp.bfloat16):
+        if mode not in ("stream", "full"):
+            raise ValueError(f"fisher mode must be 'stream' or 'full', got {mode!r}")
+        self.walker = walker
+        self.params = params
+        self.batches = calib_batches
+        self.mode = mode
+        self.dtype = jnp.dtype(dtype)
+        self.wall_s = 0.0
+        self.peak_bytes = 0
+        self._full: Optional[list[Array]] = None
+        if mode == "full":
+            t0 = time.time()
+            self._full = jax.block_until_ready(self._compute_full())
+            self.peak_bytes = sum(f.size * f.dtype.itemsize for f in self._full)
+            self.wall_s += time.time() - t0
+
+    # -- full (reference) mode ---------------------------------------------
+
+    def _compute_full(self) -> list[Array]:
+        walker = self.walker
+        nb = len(walker.blocks())
+        grad_fn = jax.jit(lambda eps, b: jax.grad(
+            lambda e: walker.loss(self.params, b, eps=e))(eps))
+        parts: list[list[Array]] = [[] for _ in range(nb)]
+        for b in self.batches:
+            eps = _zero_eps(walker, self.params, b)
+            grads = grad_fn(eps, b)
+            for bi, g in enumerate(grads):
+                parts[bi].append(g.astype(jnp.float32) ** 2)
+        fisher = [jnp.concatenate(p, 0) for p in parts]
+        return [f / jnp.maximum(jnp.mean(f), 1e-20) for f in fisher]
+
+    # -- streamed mode ------------------------------------------------------
+
+    def _grad_fn(self, bi: int):
+        """Jitted dL/dz_bi for one batch, cached across quantize() calls."""
+        walker = self.walker
+        model = walker.model
+        nb = len(walker.blocks())
+        key = ("fisher_grad", id(model), bi, nb,
+               _batch_sig(self.batches[0]), str(self.dtype))
+        hit = _GRAD_CACHE.get(key)
+        if hit is not None and hit[0]() is model:
+            hit[1][0] = weakref.ref(walker)
+            return hit[2]
+        for k in [k for k, v in _GRAD_CACHE.items() if v[0]() is None]:
+            del _GRAD_CACHE[k]
+        model_ref = weakref.ref(model)
+        walker_cell = [weakref.ref(walker)]
+        dtype = self.dtype
+
+        def g2_of(params, batch):
+            wkr = walker_cell[0]()
+            e0 = _eps_zero_for(wkr, params, batch, bi)
+
+            def loss_fn(e):
+                eps: list = [None] * nb
+                eps[bi] = e
+                return wkr.loss(params, batch, eps=eps)
+
+            g = jax.grad(loss_fn)(e0)
+            g2 = g.astype(jnp.float32) ** 2
+            # f32 reduction for the normalising mean; bf16 storage
+            return g2.astype(dtype), jnp.sum(g2, dtype=jnp.float32)
+
+        fn = jax.jit(g2_of)
+        _GRAD_CACHE[key] = (model_ref, walker_cell, fn)
+        return fn
+
+    def for_block(self, bi: int) -> Array:
+        """Normalised g^2 at block ``bi``'s output, shape ``(N, S, d)``.
+
+        In ``'stream'`` mode each call recomputes (nothing is retained
+        between calls — that is the point); in ``'full'`` mode it indexes
+        the precomputed list.
+        """
+        if self._full is not None:
+            return self._full[bi]
+        t0 = time.time()
+        fn = self._grad_fn(bi)
+        parts, total, count = [], jnp.float32(0.0), 0
+        for b in self.batches:
+            g2, s = fn(self.params, b)
+            parts.append(g2)
+            total = total + s
+            count += g2.size
+        g2 = jnp.concatenate(parts, 0)
+        mean = jnp.maximum(total / count, 1e-20)
+        # sync before timing: async dispatch would otherwise book the
+        # Fisher compute into the caller's opt_wall_s
+        g2 = jax.block_until_ready(g2 / mean.astype(g2.dtype))
+        self.peak_bytes = max(self.peak_bytes, g2.size * g2.dtype.itemsize)
+        self.wall_s += time.time() - t0
+        return g2
+
+
+def _eps_zero_for(walker, params, batch: dict, bi: int) -> Array:
+    """Zero perturbation with the shape of block ``bi``'s output."""
+    x0, _ = walker.stem(params, batch)
+    if walker.encdec and bi >= walker.enc_n:
+        B, S = batch["tokens"].shape
+        return jnp.zeros((B, S, x0.shape[-1]), x0.dtype)
+    return jnp.zeros_like(x0)
+
+
+def _zero_eps(walker, params, batch: dict) -> list[Array]:
+    """One zero perturbation per block (full-mode eps trick)."""
+    x, ctx = walker.stem(params, batch)
+    eps = []
+    for bi in range(len(walker.blocks())):
+        eps.append(jnp.zeros_like(x))
+        x = walker.apply_block(params, bi, x, ctx)
+        if walker.encdec and bi == walker.enc_n - 1:
+            _, x = walker.boundary_transition(params, batch, x)
+            ctx = walker.ctx_for(batch, bi + 1, None)
+    return eps
 
 
 def block_grads(model, params, batch: dict) -> list[Array]:

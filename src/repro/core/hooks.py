@@ -18,7 +18,12 @@ Array = jax.Array
 class RecordingHook(QuantHook):
     """Records every (path, shape) the model touches; used to enumerate
     quantizable layers and to capture linear inputs for layer-wise
-    reconstruction."""
+    reconstruction.
+
+    Safe to use inside a traced function: ``weights`` records concrete
+    shapes either way, and ``acts`` holds tracers that the enclosing
+    program can return as outputs (this is how the cached unit probe in
+    :mod:`calib_loop` extracts activations without an eager forward)."""
 
     def __init__(self, capture_acts: bool = False):
         self.weights: dict[str, tuple] = {}
@@ -82,6 +87,37 @@ class AdaRoundHook(QuantHook):
         if self.a_bits is None or path not in self.opt.get("s", {}):
             return x
         return lsq.lsq_quant(x, self.opt["s"][path], self.a_bits, True)
+
+
+class LayerCaptureHook(QuantHook):
+    """Layer-wise reconstruction hook: hard-quantizes already-finished
+    paths (``v_done``) and captures the input activation of one
+    ``target`` linear. Path keys may be real (``body.3/attn/wq``) or
+    canonical (``u0/attn/wq``) — the hook only matches strings, so the
+    cached capture programs in :mod:`calib_loop` run it under canonical
+    scopes."""
+
+    def __init__(self, qstates, v_done: dict, target: Optional[str],
+                 act_scales: Optional[dict] = None, a_bits: Optional[int] = None):
+        self.qstates = qstates
+        self.v_done = v_done
+        self.target = target
+        self.captured: Optional[Array] = None
+        self.act_scales = act_scales or {}
+        self.a_bits = a_bits
+
+    def weight(self, path, w):
+        if path in self.v_done:
+            st, cfg = self.qstates[path]
+            return adaround.hard_quant(w, self.v_done[path], st, cfg)
+        return w
+
+    def act(self, path, x):
+        if self.a_bits is not None and path in self.act_scales:
+            x = lsq.lsq_quant(x, self.act_scales[path], self.a_bits, True)
+        if path == self.target:
+            self.captured = x
+        return x
 
 
 class ServeHook(QuantHook):

@@ -31,8 +31,13 @@ from ..models.common import NO_QUANT, Ctx, QuantHook
 from ..optim import adam
 from . import adaround, calib_loop, lsq
 from .adaround import BetaSchedule
-from .hooks import RecordingHook, RTNHook
+from .fisher import FisherStream
+from .hooks import LayerCaptureHook, RTNHook
 from .quantizer import QConfig, QState, init_qstate, quantize_dequant
+
+# re-export for baselines.py (the hook moved to hooks.py so calib_loop's
+# cached capture programs can use it without a circular import)
+_LayerHook = LayerCaptureHook
 
 Array = jax.Array
 Params = Any
@@ -113,12 +118,17 @@ class Walker:
         return memory, xdec
 
     def run(self, params, batch, quant=NO_QUANT, eps: Optional[list] = None):
-        """Full forward block-by-block (used for eval & the Fisher pass)."""
+        """Full forward block-by-block (used for eval & the Fisher pass).
+
+        ``eps`` is an optional per-block list of output perturbations;
+        ``None`` entries are skipped, so the streamed Fisher pass can
+        perturb a single block without materializing zeros for the rest.
+        """
         x, ctx = self.stem(params, batch, quant)
         memory = None
         for bi in range(len(self.blocks())):
             x = self.apply_block(params, bi, x, ctx, quant)
-            if eps is not None:
+            if eps is not None and eps[bi] is not None:
                 x = x + eps[bi]
             if self.encdec and bi == self.enc_n - 1:
                 memory, x = self.boundary_transition(params, batch, x, quant)
@@ -140,6 +150,60 @@ class Walker:
 
 @dataclasses.dataclass(frozen=True)
 class ReconConfig:
+    """Static configuration for one BRECQ calibration run.
+
+    Attributes:
+      w_bits: weight bit-width for block weights (paper Tables 1-3 use
+        2/3/4; embed/head are handled separately, see
+        ``keep_embed_head_8bit``).
+      a_bits: activation bit-width; ``None`` disables activation
+        quantization (weight-only PTQ).
+      w_group: per-group weight quantization along the reduction axis
+        (group size in rows, TPU-friendly multiples of 128); ``None``
+        keeps per-channel scales.
+      scale_method: scale init, ``'minmax'`` or ``'mse'`` (paper's OMSE
+        grid search).
+      iters: AdaRound/LSQ optimization iterations per unit (paper: 20k;
+        CI/bench use far less).
+      calib_bs: minibatch size (sequences) drawn per iteration.
+      lr_v: Adam learning rate for the rounding logits ``v``.
+      lr_s: Adam learning rate for LSQ activation step sizes.
+      granularity: reconstruction unit size — ``'layer'`` (per-linear
+        AdaRound baseline), ``'block'`` (paper default), ``'stage'`` or
+        ``'net'`` (Sec. 3.2 ablation).
+      n_stages: number of stages per segment at ``granularity='stage'``.
+      use_fisher: weight the unit output MSE by the diagonal FIM
+        (squared block-output gradients, Sec. 3.3). Ignored at
+        ``granularity='layer'``.
+      keep_embed_head_8bit: quantize embedding table and LM head at 8
+        bits instead of ``w_bits`` (paper keeps first/last layers 8-bit).
+      lam: weight of the AdaRound rounding regularizer.
+      beta: the regularizer's annealing schedule.
+      input_source: unit inputs come from the ``'quant'`` stream (error
+        propagates, paper default), the ``'fp'`` stream, or a QDrop-style
+        per-sequence ``'mix'``.
+      input_mix_prob: probability of the FP input when
+        ``input_source='mix'``.
+      per_layer_bits: optional path -> bits override for mixed precision.
+      seed: PRNG seed for on-device minibatch sampling.
+      loop_impl: ``'scan'`` — fused device-resident loop (one dispatch +
+        one sync per unit); ``'python'`` — same traced step driven one
+        iteration at a time (reference mode for equivalence tests and
+        ``benchmarks/table5_calib_speed.py``'s baseline).
+      stream_dtype: storage dtype for the calibration activation streams
+        (``x_fp``/``x_q``, enc-dec memory, unit targets) and — in
+        ``fisher_mode='stream'`` — the accumulated Fisher. ``'bfloat16'``
+        (default) halves calibration HBM; ``'float32'`` is the exact
+        reference mode used by the equivalence tests. Compute inside the
+        optimization programs is always f32.
+      fisher_mode: ``'stream'`` (default) computes the diagonal Fisher
+        per reconstruction unit on demand, so peak residency is one
+        block-output array ``(N, S, d)`` regardless of depth, at the cost
+        of one extra backward pass per unit per calib batch; ``'full'``
+        is the reference all-blocks-resident eps-trick capture
+        (``nb x N x S x d`` f32).
+    """
+
     w_bits: int = 4
     a_bits: Optional[int] = None  # None = weight-only
     w_group: Optional[int] = None  # per-group quantization (beyond-paper)
@@ -158,10 +222,9 @@ class ReconConfig:
     input_mix_prob: float = 0.5  # QDrop-style mixing (beyond paper)
     per_layer_bits: Optional[dict] = None  # path -> bits (mixed precision)
     seed: int = 0
-    # 'scan': fused device-resident loop (one dispatch + one sync per
-    # unit); 'python': same traced step driven one iteration at a time
-    # (reference mode, used for equivalence tests and table5's baseline).
-    loop_impl: str = "scan"
+    loop_impl: str = "scan"  # 'scan' | 'python' (reference)
+    stream_dtype: str = "bfloat16"  # 'bfloat16' | 'float32' (reference)
+    fisher_mode: str = "stream"  # 'stream' | 'full' (reference)
 
 
 @dataclasses.dataclass
@@ -256,13 +319,59 @@ def _segments(walker: Walker) -> list[list[int]]:
 # ---------------------------------------------------------------------------
 
 
+def _nbytes(a: Optional[Array]) -> int:
+    return 0 if a is None else a.size * a.dtype.itemsize
+
+
 def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQResult:
-    """Run BRECQ calibration; returns hard-quantized params + act scales."""
+    """Run BRECQ calibration (paper Alg. 1) and return quantized params.
+
+    Args:
+      model: a model exposing the block-graph API (``begin`` /
+        ``apply_block`` / ``finish``); see ``models/``.
+      params: FP parameters (never mutated).
+      calib_batches: list of calibration batches (the paper's 1024
+        images; here token/frame batches). They are concatenated into
+        one calibration set of N sequences.
+      rc: static :class:`ReconConfig`.
+
+    Returns:
+      :class:`PTQResult` with:
+        * ``params_q`` — a params copy with hard-quantized weights baked
+          in (ready for ``evaluate`` / serving);
+        * ``act_scales`` — path -> learned LSQ step size (empty when
+          ``rc.a_bits`` is None);
+        * ``qstates`` — path -> (QState, QConfig) for every quantized
+          weight incl. the 8-bit embed/head;
+        * ``v`` — path -> final AdaRound rounding logits;
+        * ``stats`` — calibration telemetry:
+            - ``calib_wall_s``: total wall time (seconds),
+            - ``fisher_wall_s``: seconds spent in the Fisher pass,
+            - ``calib_iters_per_s``: aggregate optimizer throughput
+              (iterations/second),
+            - ``calib_peak_bytes``: estimated peak calibration residency
+              (bytes) = live activation streams + Fisher arrays; with
+              ``fisher_mode='stream'`` the Fisher term covers one unit,
+              not ``nb x N x S x d``,
+            - ``calib_peak_bytes_detail``: ``{'streams': bytes,
+              'fisher': bytes}`` breakdown,
+            - ``unit_cache`` (and ``layer_cache`` / ``probe_cache`` where
+              applicable): compiled-program cache hits/misses,
+            - per unit (``stats['units']``): ``loss_trace``,
+              ``final_recon_mse``, ``opt_wall_s``, ``calib_iters_per_s``,
+              ``cache_hit``.
+    """
     if rc.loop_impl not in ("scan", "python"):
         raise ValueError(f"loop_impl must be 'scan' or 'python', got {rc.loop_impl!r}")
+    if rc.fisher_mode not in ("stream", "full"):
+        raise ValueError(
+            f"fisher_mode must be 'stream' or 'full', got {rc.fisher_mode!r}")
+    sdtype = jnp.dtype(rc.stream_dtype)
+    if sdtype not in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float32)):
+        raise ValueError(
+            f"stream_dtype must be 'bfloat16' or 'float32', got {rc.stream_dtype!r}")
     t0 = time.time()
     walker = Walker(model)
-    nb = len(walker.blocks())
     calib = _concat_batches(calib_batches)
     base_key = jax.random.PRNGKey(rc.seed)
     cache0 = calib_loop.cache_stats()
@@ -272,23 +381,17 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
     qstates, embed_head = init_states(model, weights, rc)
     q_stem_hook = RTNHook(embed_head)
 
-    # -- Fisher at every block output (FP model, eps trick) -------------------
-    fisher: list[Optional[Array]] = [None] * nb
+    # -- diagonal Fisher at block outputs (FP model, eps trick) ---------------
+    # 'stream' computes g^2 per unit on demand inside _reconstruct_unit;
+    # 'full' precomputes every block here (reference residency).
+    fisher: Optional[FisherStream] = None
     if rc.use_fisher and rc.granularity != "layer":
-        grad_fn = jax.jit(lambda eps, b: jax.grad(
-            lambda e: walker.loss(params, b, eps=e))(eps))
-        parts: list[list[Array]] = [[] for _ in range(nb)]
-        for b in calib_batches:
-            eps = _zero_eps(walker, params, b)
-            grads = grad_fn(eps, b)
-            for bi, g in enumerate(grads):
-                parts[bi].append(g.astype(jnp.float32) ** 2)
-        fisher = [jnp.concatenate(p, 0) for p in parts]
-        fisher = [f / jnp.maximum(jnp.mean(f), 1e-20) for f in fisher]
+        fisher = FisherStream(walker, params, calib_batches,
+                              mode=rc.fisher_mode, dtype=sdtype)
 
-    # -- streams ------------------------------------------------------------------
-    x_fp = jax.jit(lambda b: walker.stem(params, b)[0])(calib)
-    x_q = jax.jit(lambda b: walker.stem(params, b, q_stem_hook)[0])(calib)
+    # -- streams (stored in rc.stream_dtype; compute stays f32) ---------------
+    x_fp = jax.jit(lambda b: walker.stem(params, b)[0].astype(sdtype))(calib)
+    x_q = jax.jit(lambda b: walker.stem(params, b, q_stem_hook)[0].astype(sdtype))(calib)
     mem_fp: Optional[Array] = None
     mem_q: Optional[Array] = None
 
@@ -296,9 +399,13 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
     v_all: dict[str, Array] = {}
     s_all: dict[str, Array] = {}
     stats = {"units": [], "granularity": rc.granularity}
+    stream_peak = 0
 
     for ui, unit in enumerate(units):
         unit_key = jax.random.fold_in(base_key, ui)
+        # while a unit runs, the old and new stream generations coexist
+        stream_peak = max(stream_peak, 2 * (_nbytes(x_fp) + _nbytes(x_q))
+                          + _nbytes(mem_fp) + _nbytes(mem_q))
         if rc.granularity == "layer":
             x_fp, x_q, v_u, s_u, ustat = _reconstruct_layerwise(
                 model, walker, params, weights, calib, unit[0], x_fp, x_q,
@@ -310,41 +417,44 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
         v_all.update(v_u)
         s_all.update(s_u)
         stats["units"].append(ustat)
-        # enc->dec boundary transition between units
+        # enc->dec boundary transition between units (computed in f32,
+        # stored back in the stream dtype)
         if walker.encdec and max(unit) == walker.enc_n - 1:
-            mem_fp, x_fp = walker.boundary_transition(params, calib, x_fp)
-            mem_q, x_q = walker.boundary_transition(params, calib, x_q, q_stem_hook)
+            mem_fp, x_fp = walker.boundary_transition(
+                params, calib, x_fp.astype(jnp.float32))
+            mem_q, x_q = walker.boundary_transition(
+                params, calib, x_q.astype(jnp.float32), q_stem_hook)
+            mem_fp, x_fp = mem_fp.astype(sdtype), x_fp.astype(sdtype)
+            mem_q, x_q = mem_q.astype(sdtype), x_q.astype(sdtype)
 
     params_q = bake(model, params, qstates, v_all, embed_head)
     cache1 = calib_loop.cache_stats()
     opt_iters = sum(u.get("opt_iters", 0) for u in stats["units"])
     opt_wall = sum(u.get("opt_wall_s", 0.0) for u in stats["units"])
+    fisher_bytes = fisher.peak_bytes if fisher is not None else 0
     stats.update(
         calib_wall_s=time.time() - t0, n_units=len(units),
         n_weights=len(qstates), loop_impl=rc.loop_impl,
+        stream_dtype=str(sdtype), fisher_mode=rc.fisher_mode,
+        fisher_wall_s=fisher.wall_s if fisher is not None else 0.0,
+        calib_peak_bytes=stream_peak + fisher_bytes,
+        calib_peak_bytes_detail={"streams": stream_peak, "fisher": fisher_bytes},
         calib_iters_per_s=opt_iters / max(opt_wall, 1e-9),
         unit_cache={"hits": cache1["unit_hits"] - cache0["unit_hits"],
-                    "misses": cache1["unit_misses"] - cache0["unit_misses"]})
+                    "misses": cache1["unit_misses"] - cache0["unit_misses"]},
+        probe_cache={"hits": cache1["probe_hits"] - cache0["probe_hits"],
+                     "misses": cache1["probe_misses"] - cache0["probe_misses"]})
     if rc.granularity == "layer":
         stats["layer_cache"] = {
             "hits": cache1["layer_hits"] - cache0["layer_hits"],
             "misses": cache1["layer_misses"] - cache0["layer_misses"]}
+        stats["cap_cache"] = {
+            "hits": cache1["cap_hits"] - cache0["cap_hits"],
+            "misses": cache1["cap_misses"] - cache0["cap_misses"]}
     all_states = dict(qstates)
     all_states.update(embed_head)
     return PTQResult(params_q=params_q, act_scales=s_all, qstates=all_states,
                      v=v_all, stats=stats)
-
-
-def _zero_eps(walker, params, batch):
-    x, ctx = walker.stem(params, batch)
-    eps = []
-    for bi in range(len(walker.blocks())):
-        eps.append(jnp.zeros_like(x))
-        x = walker.apply_block(params, bi, x, ctx)
-        if walker.encdec and bi == walker.enc_n - 1:
-            _, x = walker.boundary_transition(params, batch, x)
-            ctx = walker.ctx_for(batch, bi + 1, None)
-    return eps
 
 
 def _apply_unit(walker, params, unit, hook, x, batch, memory):
@@ -375,6 +485,16 @@ def _unit_canon(walker, unit: list[int]):
     return canon
 
 
+def _unit_uncanon(walker, unit: list[int]):
+    """Inverse of :func:`_unit_canon`: ``u{j}/rest`` -> real block path."""
+
+    def uncanon(cp: str) -> str:
+        j, rest = cp.split("/", 1)
+        return walker.block_path(unit[int(j[1:])]) + "/" + rest
+
+    return uncanon
+
+
 def _unit_pieces(walker, params, unit: list[int]):
     """(bparams, stackdefs, is_dec) — the traced/static per-unit inputs."""
     bparams = []
@@ -388,21 +508,23 @@ def _unit_pieces(walker, params, unit: list[int]):
 
 
 def _reconstruct_unit(model, walker, params, weights, calib, unit, x_fp, x_q,
-                      mem_fp, mem_q, fisher, qstates, rc: ReconConfig,
-                      unit_key):
+                      mem_fp, mem_q, fisher: Optional[FisherStream], qstates,
+                      rc: ReconConfig, unit_key):
     t0 = time.time()
     N = calib["tokens"].shape[0]
     unit = sorted(unit)
 
-    # which paths does this unit touch? (1-row probe: slice every stream)
-    rec = RecordingHook(capture_acts=True)
-    _ = _apply_unit(walker, params, unit, rec, x_q[:1],
-                    _slice_batch(calib, jnp.arange(1)), _m1(mem_q, jnp.arange(1)))
-    wpaths = [p for p in rec.weights if p in qstates]
-
     canon = _unit_canon(walker, unit)
+    uncanon = _unit_uncanon(walker, unit)
     bparams, stackdefs, is_dec = _unit_pieces(walker, params, unit)
-    g2 = fisher[max(unit)] if rc.use_fisher else None
+
+    # which paths does this unit touch? (structure-cached probe; weight
+    # paths come from an abstract trace, no per-unit eager forward)
+    b1 = _slice_batch(calib, jnp.arange(1))
+    m1 = _m1(mem_q, jnp.arange(1))
+    probe = calib_loop.get_unit_probe(model, walker, stackdefs, is_dec,
+                                      bparams, x_q[:1], b1, m1)
+    wpaths = [p for p in map(uncanon, probe.wpaths) if p in qstates]
 
     c_of = {p: canon(p) for p in wpaths}
     cfgs = {c_of[p]: qstates[p][1] for p in wpaths}
@@ -413,7 +535,7 @@ def _reconstruct_unit(model, walker, params, weights, calib, unit, x_fp, x_q,
         misses0 = calib_loop.cache_stats()["unit_misses"]
         progs = calib_loop.get_unit_programs(
             model, walker, stackdefs, is_dec, {}, rc, bs, N,
-            bparams, {}, {"v": {}, "s": {}}, (x_q, x_fp, g2, calib, mem_q))
+            bparams, {}, {"v": {}, "s": {}}, (x_q, x_fp, None, calib, mem_q))
         cache_hit = calib_loop.cache_stats()["unit_misses"] == misses0
         z_fp = progs.fwd(bparams, x_fp, calib, mem_fp)
         x_q2 = progs.fwd(bparams, x_q, calib, mem_q)
@@ -421,13 +543,20 @@ def _reconstruct_unit(model, walker, params, weights, calib, unit, x_fp, x_q,
                                     "cache_hit": cache_hit,
                                     "wall_s": time.time() - t0}
 
+    # diagonal Fisher at the unit's output block, computed on demand
+    # (streamed mode) — freed with g2 when this unit finishes; skipped
+    # units above never pay for it
+    g2 = fisher.for_block(max(unit)) if fisher is not None else None
+
     v0 = {c_of[p]: adaround.init_v(weights[p], *qstates[p]) for p in wpaths}
     s0 = {}
     act_of = {}
     if rc.a_bits is not None:
-        for p, a in rec.acts.items():
-            act_of[p] = canon(p)
-            s0[act_of[p]] = lsq.init_act_scale(a, rc.a_bits, symmetric=True)
+        # activation capture runs only when scales are needed, through the
+        # same structure-cached jitted probe
+        for cp, a in probe.acts(bparams, x_q[:1], b1, m1).items():
+            act_of[uncanon(cp)] = cp
+            s0[cp] = lsq.init_act_scale(a, rc.a_bits, symmetric=True)
     opt = {"v": v0, "s": s0}
 
     misses0 = calib_loop.cache_stats()["unit_misses"]
@@ -468,32 +597,6 @@ def _m1(mem, idx=None):
 # ---------------------------------------------------------------------------
 
 
-class _LayerHook(QuantHook):
-    """Hard-quantizes finished paths; captures the input of one target."""
-
-    def __init__(self, qstates, v_done: dict, target: Optional[str],
-                 act_scales: Optional[dict] = None, a_bits: Optional[int] = None):
-        self.qstates = qstates
-        self.v_done = v_done
-        self.target = target
-        self.captured: Optional[Array] = None
-        self.act_scales = act_scales or {}
-        self.a_bits = a_bits
-
-    def weight(self, path, w):
-        if path in self.v_done:
-            st, cfg = self.qstates[path]
-            return adaround.hard_quant(w, self.v_done[path], st, cfg)
-        return w
-
-    def act(self, path, x):
-        if self.a_bits is not None and path in self.act_scales:
-            x = lsq.lsq_quant(x, self.act_scales[path], self.a_bits, True)
-        if path == self.target:
-            self.captured = x
-        return x
-
-
 def _reconstruct_layerwise(model, walker, params, weights, calib, bi, x_fp, x_q,
                            mem_fp, mem_q, qstates, rc: ReconConfig, unit_key):
     """AdaRound-style: each linear reconstructs its own output z = x W.
@@ -504,13 +607,13 @@ def _reconstruct_layerwise(model, walker, params, weights, calib, bi, x_fp, x_q,
     program cache."""
     t0 = time.time()
     unit = [bi]
-    rec = RecordingHook(capture_acts=True)
-    _ = _apply_unit(walker, params, unit, rec, x_q[:1],
-                    _slice_batch(calib, jnp.arange(1)), _m1(mem_q, jnp.arange(1)))
-    wpaths = [p for p in rec.weights if p in qstates]
-
     canon = _unit_canon(walker, unit)
+    uncanon = _unit_uncanon(walker, unit)
     bparams, stackdefs, is_dec = _unit_pieces(walker, params, unit)
+    probe = calib_loop.get_unit_probe(
+        model, walker, stackdefs, is_dec, bparams, x_q[:1],
+        _slice_batch(calib, jnp.arange(1)), _m1(mem_q, jnp.arange(1)))
+    wpaths = [p for p in map(uncanon, probe.wpaths) if p in qstates]
     c_of = {p: canon(p) for p in wpaths}
     cfgs = {c_of[p]: qstates[p][1] for p in wpaths}
     states_c = {c_of[p]: qstates[p][0] for p in wpaths}
@@ -537,13 +640,23 @@ def _reconstruct_layerwise(model, walker, params, weights, calib, bi, x_fp, x_q,
         W = weights[path]
         st, qc = qstates[path]
 
-        # capture this linear's inputs on both streams
-        xin_q = jax.jit(lambda x, m: _cap(walker, params, bi, qstates, v_done,
-                                          s_done, rc, path, x, calib, m))(x_q, mem_q)
-        xin_fp = jax.jit(lambda x, m: _cap(walker, params, bi, qstates, {},
-                                           {}, dataclasses.replace(rc, a_bits=None),
-                                           path, x, calib, m))(x_fp, mem_fp)
-        zt = jnp.matmul(xin_fp, W.astype(xin_fp.dtype))
+        # capture this linear's inputs on both streams through the cached
+        # canonical capture programs: block k's j-th linear reuses the
+        # program traced for block 0 instead of building a fresh jit
+        states_done = {c_of[p]: qstates[p][0] for p in v_done}
+        cv_done = {c_of[p]: v for p, v in v_done.items()}
+        cs_done = {c_of[p]: s for p, s in s_done.items()}
+        cfg_items = tuple(sorted((c_of[p], qstates[p][1]) for p in v_done))
+        data_q = (bparams, states_done, cv_done, cs_done, x_q, calib, mem_q)
+        xin_q = calib_loop.get_capture_program(
+            model, walker, stackdefs, is_dec, c_of[path], cfg_items,
+            rc.a_bits, rc, data_q).run(*data_q)
+        data_fp = (bparams, {}, {}, {}, x_fp, calib, mem_fp)
+        xin_fp = calib_loop.get_capture_program(
+            model, walker, stackdefs, is_dec, c_of[path], (), None,
+            rc, data_fp).run(*data_fp)
+        zt = jnp.matmul(xin_fp.astype(jnp.float32),
+                        W.astype(jnp.float32)).astype(xin_fp.dtype)
         opt = {"v": adaround.init_v(W, st, qc)}
         if rc.a_bits is not None:
             opt["s"] = lsq.init_act_scale(xin_q, rc.a_bits, symmetric=True)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from ..models.common import NO_QUANT, QuantHook
 from . import adaround
+from .fisher import FisherStream
 from .reconstruction import (PTQResult, ReconConfig, Walker, _apply_unit,
                              _concat_batches, _slice_batch)
 
@@ -67,15 +68,11 @@ def measure(model, params, calib_batches, results: dict[int, PTQResult],
     calib = _concat_batches(calib_batches)
     sub = _slice_batch(calib, jnp.arange(min(n_samples, calib["tokens"].shape[0])))
 
-    # fisher at block outputs (reuse the eps trick on the subset)
+    # fisher at block outputs: the subset is small (n <= n_samples), so
+    # memory is not binding here — 'full' keeps the one-backward cost of
+    # the eps trick, and f32 keeps the table's absolute losses exact
     nb = len(walker.blocks())
-    fisher = [None] * nb
-    if use_fisher:
-        eps = _zero_eps_sub(walker, params, sub)
-        grads = jax.jit(lambda e, b: jax.grad(
-            lambda ee: walker.loss(params, b, eps=ee))(e))(eps, sub)
-        fisher = [g.astype(jnp.float32) ** 2 for g in grads]
-        fisher = [f / jnp.maximum(jnp.mean(f), 1e-20) for f in fisher]
+    fisher = FisherStream(walker, params, [sub], mode="full") if use_fisher else None
 
     # paths per block (from any result's qstates, grouped by prefix)
     any_res = results[min(results)]
@@ -105,7 +102,7 @@ def measure(model, params, calib_batches, results: dict[int, PTQResult],
     for bi in range(nb):
         z_fp = jax.jit(lambda x, m: _apply_unit(
             walker, params, [bi], NO_QUANT, x, sub, m))(x_fp, mem_fp)
-        g2 = fisher[bi]
+        g2 = fisher.for_block(bi) if fisher is not None else None
 
         def unit_err(select: dict[str, int]) -> float:
             hook = _SelectHook(results, select)
@@ -130,9 +127,3 @@ def measure(model, params, calib_batches, results: dict[int, PTQResult],
             mem_fp, x_fp = walker.boundary_transition(params, sub, x_fp)
 
     return SensTable(diag=diag, offdiag=offdiag, block_of=block_of, shapes=shapes)
-
-
-def _zero_eps_sub(walker, params, batch):
-    from .reconstruction import _zero_eps
-
-    return _zero_eps(walker, params, batch)

@@ -10,8 +10,24 @@ from .ref import fakequant_ref
 
 def adaround_forward(w: jax.Array, v: jax.Array, st: QState, cfg: QConfig,
                      *, hard: bool = False, backend: str = "auto") -> jax.Array:
-    """Kernel-backed equivalent of core.adaround.soft/hard_quant for 2-D
-    per-channel weights (symmetric, no grouping)."""
+    """Kernel-backed equivalent of ``core.adaround.soft_quant`` /
+    ``hard_quant`` for 2-D per-channel weights (symmetric, no grouping).
+
+    Args:
+      w: FP weight of shape (K, N).
+      v: AdaRound rounding logits, same shape as ``w``.
+      st: quantizer state; ``st.scale`` must broadcast to (1, N) (one
+        scale per output channel).
+      cfg: static quantizer config supplying the clip range
+        ``[qmin, qmax]``; must be symmetric with ``group_size=None``.
+      hard: ``False`` — soft (differentiable) rounding with the rectified
+        sigmoid of ``v``; ``True`` — hardened rounding ``(v >= 0)``.
+      backend: ``'auto'`` (Pallas on TPU, XLA reference elsewhere),
+        ``'pallas'``, or ``'xla'``.
+
+    Returns:
+      Fake-quantized weight, shape (K, N), f32.
+    """
     assert w.ndim == 2 and cfg.group_size is None and cfg.symmetric
     scale = st.scale.reshape(-1, w.shape[1])
     if backend == "auto":

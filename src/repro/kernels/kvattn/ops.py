@@ -11,7 +11,15 @@ Array = jax.Array
 
 
 def quantize_kv(k: Array, v: Array) -> tuple[Array, Array, Array, Array]:
-    """bf16 (B,S,K,hd) caches -> int8 codes + per-(token, head) scales."""
+    """Quantize KV caches to int8 with per-(token, head) scales.
+
+    Args:
+      k, v: float caches of shape (B, S, K_heads, head_dim).
+
+    Returns:
+      ``(k8, v8, kscale, vscale)`` — int8 codes with the input shapes and
+      f32 absmax/127 scales of shape (B, S, K_heads).
+    """
     def q(x):
         amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
         scale = jnp.maximum(amax / 127.0, 1e-8)
@@ -27,7 +35,26 @@ def quantize_kv(k: Array, v: Array) -> tuple[Array, Array, Array, Array]:
 def attend_int8(q: Array, k8: Array, v8: Array, kscale: Array, vscale: Array,
                 kpos: Array, cur_pos: Array, *, window=None,
                 backend: str = "auto") -> Array:
-    """Decode attention over the quantized cache. q: (B,H,hd)."""
+    """Single-step decode attention over an int8-quantized KV cache.
+
+    Args:
+      q: current-step queries of shape (B, H, head_dim).
+      k8, v8: int8 cache codes of shape (B, S, K_heads, head_dim)
+        (``H % K_heads == 0`` for grouped-query sharing).
+      kscale, vscale: f32 dequant scales of shape (B, S, K_heads) from
+        :func:`quantize_kv`.
+      kpos: cache-slot positions, (B, S) int32; negative marks an empty
+        slot.
+      cur_pos: current decode position per sequence, (B,) int32; slots
+        with ``kpos > cur_pos`` (or empty) are masked out.
+      window: optional sliding-window size in tokens (positions older
+        than ``cur_pos - window`` are masked); ``None`` = full causal.
+      backend: ``'auto'`` (Pallas on TPU, XLA reference elsewhere),
+        ``'pallas'``, or ``'xla'``.
+
+    Returns:
+      Attention output of shape (B, H, head_dim), in ``q``'s dtype.
+    """
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
     if backend == "xla":

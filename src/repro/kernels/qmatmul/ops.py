@@ -45,7 +45,19 @@ def pack_weights(codes: Array, scales, bits: int) -> QuantizedLinear:
 
 
 def qmm(x: Array, qw: QuantizedLinear, *, backend: str = "auto") -> Array:
-    """x: (..., K) -> (..., N).
+    """Packed dequant-matmul: ``x @ dequant(qw)``.
+
+    Args:
+      x: activations of shape (..., K), any float dtype; leading dims are
+        flattened to M rows for the kernel and restored on return.
+      qw: packed weight from :func:`pack_weights` — int8 container codes
+        (2/4/8-bit, ``K * bits/8`` rows) plus per-(group, out-channel)
+        f32 scales.
+      backend: ``'auto'`` (Pallas on TPU, XLA reference elsewhere),
+        ``'pallas'`` (interpret mode off-TPU), or ``'xla'``.
+
+    Returns:
+      f32 output of shape (..., N).
 
     Ragged M (not a multiple of the 8/128 sublane tile) is zero-padded up
     to the tile multiple and the output sliced back, instead of degrading

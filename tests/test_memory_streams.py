@@ -1,0 +1,150 @@
+"""Calibration memory plane: streamed Fisher, bf16 streams, probe cache.
+
+See docs/memory.md for the model these tests pin down.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ReconConfig, quantize
+from repro.core import calib_loop
+from repro.core.fisher import FisherStream
+from repro.core.reconstruction import Walker
+
+
+def _tiny(n_layers: int):
+    from repro.data import Corpus, CorpusConfig, make_batches
+    from repro.models import build_model, get_config
+
+    cfg = dataclasses.replace(get_config("brecq_lm_100m", reduced=True),
+                              n_layers=n_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
+    calib = make_batches(corpus, 3, 8, 64, seed=1, start_step=1000)
+    return model, params, calib
+
+
+@pytest.fixture(scope="module")
+def two_block():
+    return _tiny(2)
+
+
+def test_streamed_fisher_matches_full(two_block):
+    """Per-unit backward == the joint all-blocks eps-trick backward."""
+    model, params, calib = two_block
+    walker = Walker(model)
+    full = FisherStream(walker, params, calib, mode="full")
+    stream = FisherStream(walker, params, calib, mode="stream",
+                          dtype=jnp.float32)
+    for bi in range(len(walker.blocks())):
+        np.testing.assert_allclose(np.asarray(stream.for_block(bi)),
+                                   np.asarray(full.for_block(bi)),
+                                   rtol=1e-4, atol=1e-6)
+    # residency: full keeps every block, streamed keeps one
+    assert full.peak_bytes == 2 * stream.peak_bytes
+
+
+def test_streamed_fisher_end_to_end_parity(two_block):
+    """quantize() under streamed Fisher reproduces the full-mode result
+    (f32 streams isolate the Fisher path)."""
+    model, params, calib = two_block
+    mk = lambda fm: ReconConfig(w_bits=3, iters=20, calib_bs=4, seed=5,
+                                stream_dtype="float32", fisher_mode=fm)
+    r_stream = quantize(model, params, calib, mk("stream"))
+    r_full = quantize(model, params, calib, mk("full"))
+    for us, uf in zip(r_stream.stats["units"], r_full.stats["units"]):
+        np.testing.assert_allclose(us["loss_trace"], uf["loss_trace"],
+                                   rtol=1e-3, atol=1e-6)
+    assert set(r_stream.v) == set(r_full.v)
+    for p in r_stream.v:
+        np.testing.assert_array_equal(np.asarray(r_stream.v[p]) >= 0,
+                                      np.asarray(r_full.v[p]) >= 0,
+                                      err_msg=f"hardened signs differ at {p}")
+
+
+def test_bf16_stream_equivalence(two_block):
+    """bf16 stream storage moves the final recon MSE by <1% and keeps the
+    hardened rounding decisions stable."""
+    model, params, calib = two_block
+    mk = lambda dt: ReconConfig(w_bits=3, iters=30, calib_bs=4, seed=5,
+                                stream_dtype=dt)
+    r_bf16 = quantize(model, params, calib, mk("bfloat16"))
+    r_f32 = quantize(model, params, calib, mk("float32"))
+    for ub, uf in zip(r_bf16.stats["units"], r_f32.stats["units"]):
+        rel = abs(ub["final_recon_mse"] - uf["final_recon_mse"]) / \
+            max(uf["final_recon_mse"], 1e-12)
+        assert rel < 0.01, (ub["final_recon_mse"], uf["final_recon_mse"])
+    agree = []
+    for p in r_f32.v:
+        s_b = np.asarray(r_bf16.v[p]) >= 0
+        s_f = np.asarray(r_f32.v[p]) >= 0
+        agree.append(np.mean(s_b == s_f))
+    assert np.mean(agree) >= 0.98, np.mean(agree)
+    # streams were actually stored half-width
+    det_b = r_bf16.stats["calib_peak_bytes_detail"]
+    det_f = r_f32.stats["calib_peak_bytes_detail"]
+    assert det_b["streams"] * 2 == det_f["streams"]
+    assert det_b["fisher"] * 2 == det_f["fisher"]
+
+
+def test_fisher_residency_independent_of_depth():
+    """Streamed Fisher keeps one block's g2 resident whatever the depth;
+    full mode scales with nb."""
+    m2, p2, c2 = _tiny(2)
+    m4, p4, c4 = _tiny(4)
+    rc = ReconConfig(w_bits=4, iters=6, calib_bs=4, granularity="block")
+    r2 = quantize(m2, p2, c2, rc)
+    r4 = quantize(m4, p4, c4, rc)
+    f2 = r2.stats["calib_peak_bytes_detail"]["fisher"]
+    f4 = r4.stats["calib_peak_bytes_detail"]["fisher"]
+    assert f2 == f4 > 0, (f2, f4)
+    # stream residency is depth-independent too (same N, S, d)
+    assert (r2.stats["calib_peak_bytes_detail"]["streams"]
+            == r4.stats["calib_peak_bytes_detail"]["streams"])
+    # reference mode: Fisher residency doubles with depth
+    rc_full = dataclasses.replace(rc, fisher_mode="full")
+    r2f = quantize(m2, p2, c2, rc_full)
+    r4f = quantize(m4, p4, c4, rc_full)
+    assert (2 * r2f.stats["calib_peak_bytes_detail"]["fisher"]
+            == r4f.stats["calib_peak_bytes_detail"]["fisher"])
+
+
+def test_probe_cache_trace_count(tiny_trained):
+    """Identical blocks share one probe trace; a re-run traces nothing."""
+    cfg, model, params, calib, _, _ = tiny_trained
+    calib_loop.clear_cache()
+    rc = ReconConfig(w_bits=4, iters=6, calib_bs=4)
+    res = quantize(model, params, calib[:2], rc)
+    assert res.stats["probe_cache"] == {"hits": 3, "misses": 1}
+    assert calib_loop.trace_log().count("unit_probe") == 1
+    n_traces = len(calib_loop.trace_log())
+    res2 = quantize(model, params, calib[:2], rc)
+    assert res2.stats["probe_cache"] == {"hits": 4, "misses": 0}
+    assert calib_loop.trace_log().count("unit_probe") == 1
+    assert len(calib_loop.trace_log()) == n_traces
+
+
+def test_layer_capture_cache_shared_across_blocks(tiny_trained):
+    """Layer-wise capture programs are keyed by structure: block k's
+    captures reuse block 0's traces, so misses don't scale with depth."""
+    cfg, model, params, calib, _, _ = tiny_trained
+    calib_loop.clear_cache()
+    rc = ReconConfig(w_bits=4, iters=4, calib_bs=4, granularity="layer")
+    res = quantize(model, params, calib[:2], rc)
+    cap = res.stats["cap_cache"]
+    nb = res.stats["n_units"]
+    L = len(res.v) // nb  # linears per block
+    # block 0 traces 2L-1 capture programs (the first quant-stream capture
+    # has an empty done-set and shares the FP capture's key); every later
+    # block hits. Misses are depth-independent, total calls are 2L per block.
+    assert cap["misses"] == 2 * L - 1, (cap, L)
+    assert cap["misses"] + cap["hits"] == 2 * L * nb, (cap, L, nb)
+    # identical second run: all captures hit, no new traces
+    n_traces = calib_loop.trace_log().count("layer_cap")
+    res2 = quantize(model, params, calib[:2], rc)
+    assert res2.stats["cap_cache"]["misses"] == 0
+    assert calib_loop.trace_log().count("layer_cap") == n_traces
