@@ -12,7 +12,7 @@ import time
 def main() -> None:
     from . import (fig2_mixed_precision, roofline_table, table1_granularity,
                    table2_weight_only, table3_full_quant, table4_cost,
-                   table5_calib_speed)
+                   table5_calib_speed, table6_deploy)
 
     tables = [
         ("roofline_table", roofline_table.main),  # instant: reads dry-run artifacts
@@ -21,6 +21,7 @@ def main() -> None:
         ("table3_full_quant", table3_full_quant.main),
         ("table4_cost", table4_cost.main),
         ("table5_calib_speed", table5_calib_speed.main),
+        ("table6_deploy", table6_deploy.main),
         ("fig2_mixed_precision", fig2_mixed_precision.main),
     ]
     only = sys.argv[1:] if len(sys.argv) > 1 else None

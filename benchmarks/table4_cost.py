@@ -105,6 +105,21 @@ def main() -> list[dict]:
                              f"peak_mb={peak_mb:.1f};"
                              f"data_tokens={calib_tokens}")})
 
+    # production cost includes packing the deployment artifact
+    from repro.core import PTQResult
+    from repro.deploy import export
+
+    art = export(model, PTQResult(
+        params_q=jax.tree.map(jnp.asarray, res["params_q"]),
+        act_scales=res["act_scales"], qstates=res["qstates"], v=res["v"],
+        stats=res["stats"]))
+    rows.append({"name": f"deploy_w{W_BITS}",
+                 "us_per_call": art.stats["pack_wall_s"] * 1e6,
+                 "derived": (f"pack_wall_s={art.stats['pack_wall_s']:.2f};"
+                             f"artifact_mb={art.stats['artifact_bytes']/1e6:.2f};"
+                             f"fp_mb={art.stats['fp_bytes']/1e6:.2f};"
+                             f"bits_hist={art.stats['bits_histogram']}")})
+
     pq, wall, tokens = qat_ste(model, params, cfg)
     evq = evaluate(model, pq, evalb)
     rows.append({"name": f"qat_ste_w{W_BITS}", "us_per_call": wall * 1e6,

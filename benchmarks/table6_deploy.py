@@ -1,0 +1,87 @@
+"""Table 6 (beyond paper): deployment cost of the packed-int artifact.
+
+Three views of the `repro.deploy` path on the bench model:
+  * pack sweep — wall time + artifact bytes vs ``w_bits`` / ``w_group``
+    (RTN fast path; packing cost is calibration-independent),
+  * BRECQ export — pack time/bytes for the calibrated W4 result and the
+    packed-vs-baked eval parity (should be ~0: same hard rounding),
+  * serving throughput — prefill wall + decode tokens/s, FP params vs
+    the packed W4 artifact (weights resident as int codes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PTQResult, ReconConfig
+from repro.core.evaluate import evaluate
+from repro.deploy import export, rtn_artifact, tree_bytes
+from repro.launch.serve import run_prefill_decode
+
+from .common import RECON_ITERS, cached_brecq, emit, get_bench_model
+
+W_BITS_SWEEP = (2, 4, 8)
+GROUPS = (None, 64)
+BATCH, PROMPT, GEN = 8, 64, 16
+
+
+def _throughput(model, params, hook=None):
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, model.cfg.vocab, (BATCH, PROMPT)))
+    _, stat = run_prefill_decode(model, params, {"tokens": toks},
+                                 batch_size=BATCH, prompt_len=PROMPT,
+                                 gen_len=GEN, hook=hook, quiet=True)
+    return stat["t_prefill"], stat["tok_s"]
+
+
+def main() -> list[dict]:
+    cfg, model, params, calib, evalb = get_bench_model()
+    fp_bytes = tree_bytes(params)
+    rows = []
+
+    # pack sweep: bytes + wall vs bits/group (RTN path)
+    for bits in W_BITS_SWEEP:
+        for group in GROUPS:
+            art = rtn_artifact(params, bits, group, cfg=cfg)
+            s = art.stats
+            rows.append({
+                "name": f"pack_w{bits}_g{group or 'chan'}",
+                "us_per_call": s["pack_wall_s"] * 1e6,
+                "derived": (f"bytes={s['artifact_bytes']};"
+                            f"ratio={s['artifact_bytes']/fp_bytes:.3f};"
+                            f"pack_wall_s={s['pack_wall_s']:.2f}")})
+
+    # BRECQ W4 export: exactness + deployment stats for the calibrated run
+    res_d = cached_brecq(model, params, calib,
+                         ReconConfig(w_bits=4, iters=RECON_ITERS), "t2_brecq_w4")
+    res = PTQResult(params_q=jax.tree.map(jnp.asarray, res_d["params_q"]),
+                    act_scales=res_d["act_scales"], qstates=res_d["qstates"],
+                    v=res_d["v"], stats=res_d["stats"])
+    art = export(model, res)
+    baked = evaluate(model, res.params_q, evalb)
+    packed = evaluate(model, art, evalb)
+    rows.append({
+        "name": "export_brecq_w4",
+        "us_per_call": art.stats["pack_wall_s"] * 1e6,
+        "derived": (f"bytes={art.stats['artifact_bytes']};"
+                    f"ratio={art.stats['artifact_bytes']/fp_bytes:.3f};"
+                    f"loss_packed={packed['loss']:.4f};"
+                    f"loss_baked={baked['loss']:.4f};"
+                    f"bits_hist={art.stats['bits_histogram']}")})
+
+    # serving throughput fp vs packed
+    t_pre_fp, toks_fp = _throughput(model, params)
+    t_pre_q, toks_q = _throughput(model, art.params, art.hook())
+    rows.append({"name": "serve_fp", "us_per_call": t_pre_fp * 1e6,
+                 "derived": f"decode_tok_s={toks_fp:.1f};bytes={fp_bytes}"})
+    rows.append({"name": "serve_packed_w4", "us_per_call": t_pre_q * 1e6,
+                 "derived": (f"decode_tok_s={toks_q:.1f};"
+                             f"bytes={art.stats['artifact_bytes']};"
+                             f"tok_s_ratio={toks_q/max(toks_fp,1e-9):.2f}")})
+    emit(rows, "table6")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -2,9 +2,12 @@
 
     PYTHONPATH=src python examples/serve_quantized.py --quant 4
 
-Thin wrapper over launch/serve.py: builds (or loads) a model, packs the
-weights to int4/int8, prefills a batch of prompts and decodes with the
-jitted step — the host-scale version of the decode_32k dry-run cells.
+Thin wrapper over launch/serve.py: packs the weights into a saved
+`QuantizedArtifact` (int4/int8 codes + scales), re-loads it, prefills a
+batch of prompts and decodes with the jitted step from packed codes —
+the host-scale version of the decode_32k dry-run cells. Pass
+``--artifact DIR`` instead of ``--quant`` to serve a calibrated BRECQ
+export (see docs/deployment.md).
 """
 import sys
 

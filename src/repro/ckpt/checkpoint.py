@@ -121,5 +121,29 @@ class CheckpointManager:
             flat = {k: z[k] for k in z.files}
         return _unflatten_into(like, flat, shardings)
 
+    def restore_nested(self, step: int) -> dict:
+        """Structure-free restore: rebuild nested dicts from the flat
+        '/'-joined keys. Only valid for pure-dict trees (params-shaped
+        checkpoints, deployment artifacts) — list/tuple nodes flatten to
+        integer keys and are not reconstructed. Dtypes (incl. int8
+        packed codes) round-trip exactly through the npz."""
+        d = self.dir / f"step_{step:08d}"
+        tree: dict = {}
+        with np.load(d / "arrays.npz") as z:
+            for key in z.files:
+                node = tree
+                parts = key.split(SEP)
+                for p in parts[:-1]:
+                    node = node.setdefault(p, {})
+                arr = z[key]
+                if arr.dtype.kind == "V" and arr.dtype.itemsize == 2:
+                    # npz stores ml_dtypes.bfloat16 as an anonymous
+                    # 2-byte void; f16 round-trips natively, so V2 is bf16
+                    import ml_dtypes
+
+                    arr = arr.view(ml_dtypes.bfloat16)
+                node[parts[-1]] = jax.numpy.asarray(arr)
+        return tree
+
     def manifest(self, step: int) -> dict:
         return json.loads((self.dir / f"step_{step:08d}" / "manifest.json").read_text())

@@ -22,8 +22,11 @@ def evaluate(model, params, batches: list[dict], act_scales: Optional[dict] = No
 
     Args:
       model: block-graph model (same API ``quantize`` consumes).
-      params: parameters to evaluate — FP originals or the baked
-        ``PTQResult.params_q``.
+      params: parameters to evaluate — FP originals, the baked
+        ``PTQResult.params_q``, or a packed
+        :class:`repro.deploy.QuantizedArtifact` (its ``act_scales`` and
+        manifest ``a_bits`` are applied automatically; weights execute
+        through the packed ``qmm`` path).
       batches: eval batches, each with ``tokens`` of shape (B, S).
       act_scales: path -> LSQ step size from calibration; together with
         ``a_bits`` enables activation fake-quant at serve time. Pass both
@@ -35,6 +38,12 @@ def evaluate(model, params, batches: list[dict], act_scales: Optional[dict] = No
       ``ppl`` (exp(loss)) and ``top1`` (next-token accuracy in [0, 1]),
       averaged over ``batches``.
     """
+    from ..deploy import QuantizedArtifact
+
+    if isinstance(params, QuantizedArtifact):
+        act_scales = act_scales or params.act_scales
+        a_bits = a_bits or params.a_bits
+        params = params.params
     walker = Walker(model)
     hook = ServeHook(act_scales, a_bits) if (act_scales and a_bits) else NO_QUANT
 

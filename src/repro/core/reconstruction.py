@@ -109,12 +109,18 @@ class Walker:
 
     def boundary_transition(self, params, batch, x, quant=NO_QUANT):
         """enc output -> (memory, decoder stem x)."""
+        from ..models import common as cm
         from ..models.transformer import _norm
 
         memory = _norm(self.model.cfg, params["enc_norm"], x)
         hook = quant if quant is not None else NO_QUANT
-        table = hook.weight("embed/table", params["embed"]["table"])
-        xdec = jnp.take(table, batch["tokens"], axis=0)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = Ctx(cfg=self.model.cfg, positions=pos, quant=hook)
+        # embed_lookup (not a raw table gather) so a packed int8 table
+        # from a deployment artifact dequantizes correctly here too
+        xdec = cm.embed_lookup(ctx, params["embed"], tokens)
         return memory, xdec
 
     def run(self, params, batch, quant=NO_QUANT, eps: Optional[list] = None):
@@ -453,6 +459,12 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
             "misses": cache1["cap_misses"] - cache0["cap_misses"]}
     all_states = dict(qstates)
     all_states.update(embed_head)
+    # deployment telemetry: what an export of this result will pack
+    hist: dict[str, int] = {}
+    for _p, (_st, qcfg) in all_states.items():
+        hist[str(qcfg.bits)] = hist.get(str(qcfg.bits), 0) + 1
+    stats.update(w_bits=rc.w_bits, a_bits=rc.a_bits, w_group=rc.w_group,
+                 bits_histogram=hist)
     return PTQResult(params_q=params_q, act_scales=s_all, qstates=all_states,
                      v=v_all, stats=stats)
 

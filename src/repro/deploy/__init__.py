@@ -1,0 +1,13 @@
+"""Packed-int deployment: one artifact format from `quantize()` to serving.
+
+Public API:
+  * :class:`QuantizedArtifact` — packed codes + scales + manifest.
+  * :func:`export` — PTQResult -> artifact (exact, mixed-precision aware).
+  * :func:`rtn_artifact` / :func:`quantize_tree` — calibration-free RTN
+    fast path (``quantize_tree`` is the traceable tree transform).
+  * :func:`dequant_leaf` / :func:`tree_bytes` — leaf helpers used by the
+    models' packed-weight path and the launch layer.
+"""
+from .artifact import QuantizedArtifact, export, rtn_artifact  # noqa: F401
+from .pack import (container_bits, dequant_leaf, pack_codes,  # noqa: F401
+                   quantize_tree, rtn_bits_by_path, rtn_pack_leaf, tree_bytes)

@@ -1,0 +1,243 @@
+"""`QuantizedArtifact`: the canonical deployment output of calibration.
+
+BRECQ's product is not a fake-quantized f32 tree — it is a packed
+integer model that real hardware can serve. This module turns a
+:class:`~repro.core.reconstruction.PTQResult` (or a calibration-free RTN
+pass) into one object that every downstream consumer speaks:
+
+* ``params`` — a params-shaped pytree where each quantized weight is a
+  packed node ``{"w": int8 codes, "qscale": f32 scales}`` (layout in
+  :mod:`.pack`); models execute these through the ``QuantHook``
+  weight-provider protocol (``packed_matmul`` -> ``qmm``), so serving
+  holds int codes in HBM, not a dequantized f32 copy.
+* ``act_scales`` — path -> learned LSQ step size (empty for weight-only).
+* ``manifest`` — JSON-serializable static description: arch, per-path
+  code bits (mixed precision preserved), group size, activation bits.
+* ``stats`` — deployment telemetry: ``pack_wall_s``, ``artifact_bytes``,
+  ``fp_bytes``, per-path ``bits_histogram``.
+
+``save()``/``load()`` go through :class:`repro.ckpt.CheckpointManager`
+(atomic step directory, npz arrays + manifest.json), so artifacts ride
+the same fault-tolerant storage as training checkpoints.
+
+Export is exact: baked fake-quant weights in ``params_q`` lie on the
+quantizer grid, so ``quantize_int`` recovers the integer codes
+bit-perfectly and ``dequant(pack(codes)) == params_q`` leaf for leaf.
+Mixed-precision stacked leaves are stored at the widest layer's
+container (a narrow code in a wide container dequantizes unchanged —
+see pack.py "container promotion").
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..ckpt.checkpoint import CheckpointManager
+from ..core.quantizer import quantize_int
+from .pack import pack_codes, quantize_tree, rtn_bits_by_path, tree_bytes
+
+Array = jax.Array
+Params = Any
+
+ARTIFACT_VERSION = 1
+_ESC = "%2F"  # act-scale paths contain '/', which is the ckpt tree separator
+
+
+@dataclasses.dataclass
+class QuantizedArtifact:
+    """Packed-int deployment artifact. See module docstring."""
+
+    params: Params
+    act_scales: dict[str, Array]
+    manifest: dict
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    # -- accounting -----------------------------------------------------------
+
+    def nbytes(self) -> int:
+        return tree_bytes(self.params) + tree_bytes(self.act_scales)
+
+    @property
+    def a_bits(self) -> Optional[int]:
+        return self.manifest.get("a_bits")
+
+    def hook(self):
+        """Serving hook: LSQ activation fake-quant when calibrated, else
+        the default weight-provider (packed matmuls via ``qmm``)."""
+        from ..core.hooks import ServeHook
+        from ..models.common import NO_QUANT
+
+        if self.act_scales and self.a_bits:
+            return ServeHook(self.act_scales, self.a_bits)
+        return NO_QUANT
+
+    # -- persistence ----------------------------------------------------------
+
+    def save(self, directory: str, step: int = 0) -> None:
+        """Atomic save through the checkpoint layer (npz + manifest)."""
+        mgr = CheckpointManager(directory, keep=1)
+        tree = {"params": self.params,
+                "act_scales": {k.replace("/", _ESC): v
+                               for k, v in self.act_scales.items()}}
+        mgr.save(step, tree, meta={"manifest": self.manifest,
+                                   "stats": self.stats})
+
+    @classmethod
+    def load(cls, directory: str, step: Optional[int] = None
+             ) -> "QuantizedArtifact":
+        mgr = CheckpointManager(directory)
+        step = mgr.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no artifact checkpoint in {directory}")
+        tree = mgr.restore_nested(step)
+        meta = mgr.manifest(step)["meta"]
+        acts = {k.replace(_ESC, "/"): v
+                for k, v in tree.get("act_scales", {}).items()}
+        return cls(params=tree["params"], act_scales=acts,
+                   manifest=meta.get("manifest", {}),
+                   stats=meta.get("stats", {}))
+
+
+# ---------------------------------------------------------------------------
+# export: PTQResult -> artifact
+# ---------------------------------------------------------------------------
+
+
+def export(model, result, *, a_bits: Optional[int] = None) -> QuantizedArtifact:
+    """Pack a calibrated :class:`PTQResult` into a :class:`QuantizedArtifact`.
+
+    Args:
+      model: the block-graph model the result was calibrated for (its
+        config feeds the manifest).
+      result: ``PTQResult`` from :func:`repro.core.quantize` — hardened
+        AdaRound weights live in ``params_q``; ``qstates`` carries the
+        per-path (QState, QConfig) incl. mixed-precision bit widths and
+        the 8-bit embed/head.
+      a_bits: activation bit-width matching ``result.act_scales``; taken
+        from ``result.stats`` when calibration recorded it.
+
+    Returns:
+      Artifact whose dequantized weights equal ``result.params_q``
+      bit-for-bit (same hard rounding; f32 accumulation at serve time).
+    """
+    t0 = time.time()
+    if a_bits is None:
+        a_bits = result.stats.get("a_bits") if isinstance(result.stats, dict) else None
+    params_q = result.params_q
+    art = jax.tree.map(lambda x: x, params_q)  # fresh containers, shared leaves
+    bits_by_path: dict[str, int] = {}
+    group = None
+
+    # group stacked per-layer paths ("body.3/sub0/attn/wq") by their leaf
+    stacked: dict[tuple, dict[int, str]] = {}
+    flat: list[str] = []
+    for path, (st, qc) in result.qstates.items():
+        bits_by_path[path] = qc.bits
+        if qc.group_size is not None:
+            group = qc.group_size
+        parts = path.split("/")
+        if "." in parts[0]:
+            sname, ri = parts[0].rsplit(".", 1)
+            stacked.setdefault((sname, *parts[1:]), {})[int(ri)] = path
+        else:
+            flat.append(path)
+
+    for key, by_layer in stacked.items():
+        node = art[key[0]]
+        for k in key[1:]:
+            node = node[k]
+        w = node["w"]  # (n_layers, …, K, N) baked fake-quant values
+        n = w.shape[0]
+        missing = set(range(n)) - set(by_layer)
+        if missing:
+            raise ValueError(f"unquantized layers {sorted(missing)} in "
+                             f"stacked leaf {'/'.join(key)}")
+        cbits = max(result.qstates[by_layer[i]][1].bits for i in range(n))
+        codes, scales = [], []
+        for i in range(n):
+            st, qc = result.qstates[by_layer[i]]
+            codes.append(quantize_int(w[i], st, qc))  # exact on-grid recovery
+            scales.append(_scale_rows(st.scale, w[i].ndim))
+        node["w"] = pack_codes(jnp.stack(codes), w.shape[-2], cbits)
+        node["qscale"] = jnp.stack(scales)
+
+    for path in flat:
+        st, qc = result.qstates[path]
+        if path == "embed/table":
+            table = params_q["embed"]["table"]
+            art["embed"]["table"] = quantize_int(table, st, qc)
+            art["embed"]["table_qscale"] = st.scale.reshape(1, table.shape[-1])
+        elif path == "head/w":
+            w = params_q["head"]["w"]
+            art["head"]["w"] = pack_codes(quantize_int(w, st, qc),
+                                          w.shape[-2], qc.bits)
+            art["head"]["qscale"] = _scale_rows(st.scale, w.ndim)
+        else:
+            raise ValueError(f"unstacked quantized path {path!r}")
+
+    cfg = model.cfg
+    manifest = {
+        "version": ARTIFACT_VERSION,
+        "arch": cfg.name, "family": cfg.family,
+        "n_layers": cfg.n_layers, "d_model": cfg.d_model, "vocab": cfg.vocab,
+        "tie_embeddings": cfg.tie_embeddings,
+        "w_group": group, "a_bits": a_bits,
+        "bits_by_path": bits_by_path,
+    }
+    artifact = QuantizedArtifact(art, dict(result.act_scales), manifest)
+    artifact.stats = _deploy_stats(artifact, tree_bytes(params_q),
+                                   time.time() - t0, bits_by_path)
+    return artifact
+
+
+def _scale_rows(scale: Array, w_ndim: int) -> Array:
+    """QState scale (keepdims layout) -> the node's (…, G, N) qscale."""
+    if scale.ndim == w_ndim + 1:  # grouped: (…, G, 1, N)
+        return jnp.squeeze(scale, axis=-2)
+    return scale  # per-channel/tensor keepdims already (…, 1, N)-like
+
+
+# ---------------------------------------------------------------------------
+# RTN fast path: params -> artifact without calibration
+# ---------------------------------------------------------------------------
+
+
+def rtn_artifact(params: Params, bits: int, group: Optional[int] = None,
+                 *, cfg=None) -> QuantizedArtifact:
+    """Calibration-free artifact: :func:`quantize_tree` + manifest/stats.
+
+    The phantom ``dist.deploy`` replacement for quick serving experiments
+    (``launch/serve.py --quant``); accuracy is plain RTN — use
+    :func:`export` on a calibrated result for BRECQ quality.
+    """
+    t0 = time.time()
+    bits_by_path = rtn_bits_by_path(params, bits)
+    packed = jax.jit(quantize_tree, static_argnums=(1, 2))(params, bits, group)
+    jax.block_until_ready(jax.tree.leaves(packed))
+    manifest = {
+        "version": ARTIFACT_VERSION,
+        "arch": getattr(cfg, "name", None), "family": getattr(cfg, "family", None),
+        "n_layers": getattr(cfg, "n_layers", None),
+        "d_model": getattr(cfg, "d_model", None),
+        "vocab": getattr(cfg, "vocab", None),
+        "tie_embeddings": getattr(cfg, "tie_embeddings", None),
+        "w_group": group, "a_bits": None,
+        "bits_by_path": bits_by_path,
+    }
+    artifact = QuantizedArtifact(packed, {}, manifest)
+    artifact.stats = _deploy_stats(artifact, tree_bytes(params),
+                                   time.time() - t0, bits_by_path)
+    return artifact
+
+
+def _deploy_stats(artifact: QuantizedArtifact, fp_bytes: int, wall_s: float,
+                  bits_by_path: dict[str, int]) -> dict:
+    hist: dict[str, int] = {}
+    for b in bits_by_path.values():
+        hist[str(b)] = hist.get(str(b), 0) + 1
+    return {"pack_wall_s": wall_s, "artifact_bytes": artifact.nbytes(),
+            "fp_bytes": fp_bytes, "bits_histogram": hist}

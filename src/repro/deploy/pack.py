@@ -1,0 +1,172 @@
+"""Leaf-level packed-int weight format + the calibration-free RTN path.
+
+This is the deployment half of the quantizer: integer codes packed into
+int8 containers along the reduction axis (``pack_int`` layout,
+offset-binary) plus per-(group, out-channel) f32 scales. A packed linear
+node in a params tree is
+
+    {"w": int8 (..., K * bits / 8, N), "qscale": f32 (..., G, N), ...}
+
+where ``G = K / group_size`` (``G == 1`` for per-channel / per-tensor
+scales). Bits and group are *inferred from shapes* at the use site
+(``K`` is known from the activation), so the node needs no static
+metadata and slices cleanly through ``lax.scan`` over stacked layers.
+
+Container promotion: codes quantized at ``b`` bits may be stored in a
+wider container (e.g. 2-bit codes in a 4-bit field, or unpacked int8)
+without changing their dequantized values — the unpack subtracts the
+container's own offset. This is how mixed-precision layers share one
+stacked leaf, and how a reduction dim not divisible by the packing
+factor falls back to an int8 container instead of failing.
+
+Everything here is functional and jit/eval_shape-safe (shape-driven
+decisions only): ``launch/steps.py`` traces :func:`quantize_tree` to
+build abstract serving params.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantizer import pack_int, unpack_int
+
+Array = jax.Array
+Params = Any
+
+# param-tree keys that must stay FP even though they hold a linear
+# weight: the MoE router is read directly (no quant hook) by design.
+SKIP_KEYS = ("router",)
+# leaves under these top-level keys quantize at 8 bits regardless of the
+# requested width (the paper keeps first/last layers 8-bit).
+EIGHT_BIT_ROOTS = ("embed", "head")
+
+
+def container_bits(bits: int, k: int) -> int:
+    """Container width for ``bits``-wide codes over a K-row reduction dim.
+
+    Sub-byte packing needs the field width to divide a byte (2/4-bit —
+    the shape-based bits inference at the use site can only distinguish
+    whole values-per-byte factors, so 3/5/6/7-bit codes store unpacked)
+    and ``K`` divisible by the values-per-byte factor; otherwise the
+    codes stay in an int8 container (values unchanged).
+    """
+    if bits >= 8 or 8 % bits != 0:
+        return 8
+    return bits if k % (8 // bits) == 0 else 8
+
+
+def pack_codes(codes: Array, k: int, bits: int) -> Array:
+    """(…, K, N) int8 codes -> packed (…, K*cbits/8, N) container."""
+    return pack_int(codes, container_bits(bits, k), axis=-2)
+
+
+def dequant_leaf(wp: Array, qscale: Array, k: int) -> Array:
+    """Packed node -> f32 weights. ``k`` is the original reduction dim.
+
+    wp: (…, K * cbits/8, N) int8; qscale: (…, G, N) f32 broadcastable
+    against the leading dims. Bits and group size are inferred from the
+    shapes (``per = K // rows``, ``group = K // G``).
+    """
+    per = k // wp.shape[-2]
+    bits = 8 // per
+    codes = unpack_int(wp, bits, k, axis=-2).astype(jnp.float32)
+    g_rows = qscale.shape[-2]
+    n = codes.shape[-1]
+    cg = codes.reshape(*codes.shape[:-2], g_rows, k // g_rows, n)
+    w = cg * qscale[..., :, None, :]
+    return w.reshape(*codes.shape)
+
+
+def rtn_pack_leaf(w: Array, bits: int, group: Optional[int] = None
+                  ) -> tuple[Array, Array]:
+    """Symmetric minmax RTN -> (packed codes, scales) for one leaf.
+
+    w: (…, K, N). Scales are per-(group, out-channel); ``group`` falls
+    back to per-channel (one group spanning K) when it does not divide K.
+    Returns packed (…, K*cbits/8, N) int8 and qscale (…, G, N) f32.
+    """
+    k, n = w.shape[-2], w.shape[-1]
+    g = group if (group and k % group == 0) else k
+    qmax = 2 ** (bits - 1) - 1
+    wg = w.astype(jnp.float32).reshape(*w.shape[:-2], k // g, g, n)
+    amax = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax / qmax, 1e-8)
+    codes = jnp.clip(jnp.round(wg / scale), -(2 ** (bits - 1)), qmax)
+    codes = codes.reshape(w.shape).astype(jnp.int8)
+    return pack_codes(codes, k, bits), scale.squeeze(-2)
+
+
+def _leaf_plan(node: dict, keypath: tuple, bits: int):
+    """Packing decision for one dict node: ``('embed', 8)``,
+    ``('linear', b)`` or ``None`` (pass through). The single predicate
+    shared by :func:`quantize_tree` and :func:`rtn_bits_by_path` so the
+    manifest walk can never drift from the packing walk. Already-packed
+    nodes (``table_qscale`` / ``qscale`` present) are never re-quantized."""
+    if "table" in node and "table_qscale" not in node:
+        return ("embed", 8)
+    if ("w" in node and "qscale" not in node
+            and getattr(node["w"], "ndim", 0) >= 2
+            and (not keypath or keypath[-1] not in SKIP_KEYS)):
+        return ("linear", 8 if keypath and keypath[0] in EIGHT_BIT_ROOTS else bits)
+    return None
+
+
+def quantize_tree(params: Params, bits: int, group: Optional[int] = None
+                  ) -> Params:
+    """Calibration-free RTN packing of a whole params tree.
+
+    Every linear node ``{"w": (…, K, N)}`` becomes a packed node
+    ``{"w": int8, "qscale": f32}`` consumed by the models' packed-weight
+    path; the embedding table becomes int8 with a per-channel
+    ``table_qscale``. Embed/head stay 8-bit, the MoE router stays FP,
+    1-D leaves (norms, biases, gates, convs) pass through untouched, and
+    already-packed nodes are left alone (idempotent).
+
+    Pure shape-driven jnp — safe under jit and ``jax.eval_shape`` (the
+    launch layer traces it to derive abstract serving params).
+    """
+
+    def walk(node, keypath):
+        if not isinstance(node, dict):
+            return node
+        plan = _leaf_plan(node, keypath, bits)
+        if plan is None:
+            return {k: walk(v, keypath + (k,)) for k, v in node.items()}
+        kind, b = plan
+        out = dict(node)
+        if kind == "embed":
+            out["table"], out["table_qscale"] = rtn_pack_leaf(node["table"], b, None)
+        else:
+            out["w"], out["qscale"] = rtn_pack_leaf(node["w"], b, group)
+        return out
+
+    return walk(params, ())
+
+
+def tree_bytes(tree) -> int:
+    """Physical bytes of every array leaf (int8 counts 1 byte/value)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def rtn_bits_by_path(params: Params, bits: int) -> dict[str, int]:
+    """'/'-joined path -> code bits for the leaves :func:`quantize_tree`
+    would pack, from the *unquantized* tree (shape-only walk; same
+    :func:`_leaf_plan` predicate as the packing walk)."""
+
+    def walk(node, keypath, out):
+        if not isinstance(node, dict):
+            return
+        plan = _leaf_plan(node, keypath, bits)
+        if plan is not None:
+            kind, b = plan
+            suffix = ("table",) if kind == "embed" else ()
+            out["/".join(keypath + suffix)] = b
+            return
+        for key, v in node.items():
+            walk(v, keypath + (key,), out)
+
+    out: dict[str, int] = {}
+    walk(params, (), out)
+    return out

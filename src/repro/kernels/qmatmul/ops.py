@@ -44,6 +44,16 @@ def pack_weights(codes: Array, scales, bits: int) -> QuantizedLinear:
     return QuantizedLinear(pack_int(codes, bits), scales, bits, k)
 
 
+def from_node(node, k: int) -> QuantizedLinear:
+    """View a packed params node (`repro.deploy` format) as a
+    :class:`QuantizedLinear`. ``k`` is the original reduction dim;
+    container bits are inferred from the packed row count."""
+    wp, scales = node["w"], node["qscale"]
+    assert wp.ndim == 2, f"qmm consumes 2-D packed weights, got {wp.shape}"
+    per = k // wp.shape[0]
+    return QuantizedLinear(wp, scales, 8 // per, k)
+
+
 def qmm(x: Array, qw: QuantizedLinear, *, backend: str = "auto") -> Array:
     """Packed dequant-matmul: ``x @ dequant(qw)``.
 

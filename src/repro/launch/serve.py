@@ -1,16 +1,23 @@
-"""Batched serving driver: prefill + decode with optional BRECQ weights.
+"""Batched serving driver: prefill + decode from a packed QuantizedArtifact.
 
 Serves a (small, host-runnable) model with continuous batched requests:
-  1. load FP or BRECQ-quantized params (packed-int deployment format),
+  1. resolve weights — FP params, a saved :class:`QuantizedArtifact`
+     (``--artifact DIR``), or a fresh RTN artifact (``--quant BITS``,
+     which is saved and re-loaded so the served bytes are exactly what a
+     deployment would ship),
   2. prefill the prompt batch, 3. decode N tokens with the jitted step,
-  4. report tokens/s and (if quantized) the bytes saved.
+  4. report artifact bytes vs FP and tokens/s packed-vs-fp.
 
-The production-mesh serving path is exercised by dryrun.py decode cells;
-this driver runs the same model code end-to-end on the host.
+Packed weights stay int8 codes in HBM end-to-end: every linear resolves
+through the ``QuantHook.packed_matmul`` weight-provider (``qmm``), so the
+resident bytes printed here are the real serving footprint. The
+production-mesh serving path is exercised by dryrun.py decode cells; this
+driver runs the same model code end-to-end on the host.
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import jax
@@ -18,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..data import Corpus, CorpusConfig
-from ..dist import deploy
+from ..deploy import QuantizedArtifact, rtn_artifact, tree_bytes
 from ..models import get_model
 
 
@@ -29,14 +36,80 @@ def parse_args(argv=None):
     p.add_argument("--batch", type=int, default=8)
     p.add_argument("--prompt-len", type=int, default=64)
     p.add_argument("--gen-len", type=int, default=32)
-    p.add_argument("--quant", type=int, default=None, choices=[2, 4, 8])
+    p.add_argument("--quant", type=int, default=None, choices=[2, 4, 8],
+                   help="pack weights to this many bits (RTN artifact)")
     p.add_argument("--group", type=int, default=None)
+    p.add_argument("--artifact", default=None,
+                   help="serve from a saved QuantizedArtifact directory")
+    p.add_argument("--save-artifact", default=None,
+                   help="where --quant saves its artifact (default: tmpdir)")
+    p.add_argument("--no-compare-fp", action="store_true",
+                   help="skip the FP throughput reference pass")
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args(argv)
 
 
-def tree_bytes(t) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+def _check_manifest(manifest: dict, cfg) -> None:
+    """Fail fast (clearly) when a loaded artifact doesn't match the model
+    built from --arch/--reduced, instead of an opaque shape error deep in
+    prefill."""
+    for field, got in (("arch", cfg.name), ("n_layers", cfg.n_layers),
+                       ("d_model", cfg.d_model), ("vocab", cfg.vocab)):
+        want = manifest.get(field)
+        if want is not None and want != got:
+            raise ValueError(
+                f"artifact was exported for {field}={want!r} but the served "
+                f"model has {field}={got!r} — pass the matching --arch/"
+                f"--reduced flags (manifest: arch={manifest.get('arch')!r}, "
+                f"n_layers={manifest.get('n_layers')}, "
+                f"d_model={manifest.get('d_model')}, "
+                f"vocab={manifest.get('vocab')})")
+
+
+def run_prefill_decode(model, params, batch, *, batch_size: int,
+                       prompt_len: int, gen_len: int, hook=None, tag="fp",
+                       quiet=False):
+    """One prefill + ``gen_len`` greedy decode steps with the jitted
+    step; returns (gen tokens, {'t_prefill','t_decode','tok_s'}). The
+    single timing harness shared by this driver and
+    ``benchmarks/table6_deploy.py``."""
+    from ..models.common import NO_QUANT
+
+    hook = hook or NO_QUANT
+    cache = model.init_cache(batch_size, prompt_len + gen_len, jnp.float32)
+
+    t0 = time.time()
+    prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c, hook, remat="none"))
+    logits, cache = prefill(params, batch, cache)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos, hook),
+        donate_argnums=(2,))
+    tok = jnp.argmax(logits, -1)[:, None]
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(gen_len - 1):
+        pos = jnp.full((batch_size,), prompt_len + i, jnp.int32)
+        logits, cache = decode(params, tok, cache, pos)
+        tok = jnp.argmax(logits, -1)[:, None]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    toks = batch_size * (gen_len - 1)
+    tok_s = toks / max(t_decode, 1e-9)
+    if not quiet:
+        print(f"[{tag}] prefill {batch_size}x{prompt_len} in {t_prefill:.2f}s; "
+              f"decode {toks} tokens in {t_decode:.2f}s ({tok_s:.1f} tok/s)")
+    gen = jnp.concatenate(out_tokens, axis=1)
+    return gen, {"t_prefill": t_prefill, "t_decode": t_decode, "tok_s": tok_s}
+
+
+def _run_once(model, params, batch, args, hook=None, tag="fp"):
+    return run_prefill_decode(model, params, batch, batch_size=args.batch,
+                              prompt_len=args.prompt_len,
+                              gen_len=args.gen_len, hook=hook, tag=tag)
 
 
 def main(argv=None, params=None):
@@ -45,11 +118,34 @@ def main(argv=None, params=None):
     if params is None:
         params = model.init(jax.random.PRNGKey(args.seed))
     fp_bytes = tree_bytes(params)
-    if args.quant is not None:
-        params = deploy.quantize_tree(params, args.quant, args.group)
-        print(f"quantized W{args.quant}: {fp_bytes/1e6:.1f}MB -> "
-              f"{tree_bytes(params)/1e6:.1f}MB")
 
+    artifact = None
+    tmp_dir = None  # cleaned on exit when the user didn't ask to keep it
+    if args.artifact:
+        artifact = QuantizedArtifact.load(args.artifact)
+        _check_manifest(artifact.manifest, cfg)
+        print(f"loaded artifact {args.artifact}: "
+              f"{artifact.nbytes()/1e6:.1f}MB, manifest arch="
+              f"{artifact.manifest.get('arch')}")
+    elif args.quant is not None:
+        art = rtn_artifact(params, args.quant, args.group, cfg=cfg)
+        if args.save_artifact:
+            out_dir = args.save_artifact
+        else:
+            tmp_dir = tempfile.TemporaryDirectory(prefix="brecq_art_")
+            out_dir = tmp_dir.name
+        art.save(out_dir)
+        artifact = QuantizedArtifact.load(out_dir)  # serve what was shipped
+        print(f"packed W{args.quant} artifact in "
+              f"{art.stats['pack_wall_s']:.2f}s -> {out_dir}")
+    try:
+        return _serve(args, cfg, model, params, artifact, fp_bytes)
+    finally:
+        if tmp_dir is not None:
+            tmp_dir.cleanup()
+
+
+def _serve(args, cfg, model, params, artifact, fp_bytes):
     corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
     prompts = jnp.asarray(corpus.sample(args.batch, args.prompt_len, seed=7))
     batch = {"tokens": prompts}
@@ -62,31 +158,22 @@ def main(argv=None, params=None):
         batch["frames"] = jnp.asarray(
             rng.normal(size=(args.batch, args.prompt_len, cfg.d_model)), jnp.float32)
 
-    max_len = args.prompt_len + args.gen_len
-    cache = model.init_cache(args.batch, max_len, jnp.float32)
+    if artifact is None:
+        gen, _ = _run_once(model, params, batch, args, tag="fp")
+        print("sample:", np.asarray(gen[0][:16]))
+        return gen
 
-    t0 = time.time()
-    prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c, remat="none"))
-    logits, cache = prefill(params, batch, cache)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
+    art_bytes = artifact.nbytes()
+    print(f"weights resident as packed int codes: {fp_bytes/1e6:.1f}MB fp32 -> "
+          f"{art_bytes/1e6:.1f}MB packed ({art_bytes/fp_bytes:.3f}x)")
+    assert art_bytes < fp_bytes, (art_bytes, fp_bytes)
 
-    decode = jax.jit(model.decode_step, donate_argnums=(2,))
-    tok = jnp.argmax(logits, -1)[:, None]
-    out_tokens = [tok]
-    t0 = time.time()
-    for i in range(args.gen_len - 1):
-        pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
-        logits, cache = decode(params, tok, cache, pos)
-        tok = jnp.argmax(logits, -1)[:, None]
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    toks = args.batch * (args.gen_len - 1)
-    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
-          f"decode {toks} tokens in {t_decode:.2f}s "
-          f"({toks/max(t_decode,1e-9):.1f} tok/s)")
-    gen = jnp.concatenate(out_tokens, axis=1)
+    gen, qstat = _run_once(model, artifact.params, batch, args,
+                           hook=artifact.hook(), tag="packed")
+    if not args.no_compare_fp:
+        _, fstat = _run_once(model, params, batch, args, tag="fp")
+        print(f"packed vs fp: {qstat['tok_s']:.1f} vs {fstat['tok_s']:.1f} tok/s "
+              f"decode; bytes {art_bytes/1e6:.1f}MB vs {fp_bytes/1e6:.1f}MB")
     print("sample:", np.asarray(gen[0][:16]))
     return gen
 

@@ -35,13 +35,36 @@ class QuantHook:
     ``act(name, x)``: returns the (possibly fake-quantized) activation.
     The BRECQ engine installs real implementations during calibration;
     the serving path installs a baked/LSQ variant.
+
+    Weight-provider protocol: when a params node carries packed int
+    codes (a ``qscale`` sibling — the `repro.deploy` artifact format),
+    :func:`dense`/:func:`lm_head` hand the whole matmul to
+    ``packed_matmul`` instead of materializing an f32 weight. The
+    default executes via the packed ``qmm`` kernel (weights stay int
+    codes in HBM; dequant happens tile-wise in-register), after routing
+    the activation through ``act`` so serve-time LSQ still applies.
+    ``packed_backend`` picks the qmm execution path ('auto': Pallas on
+    TPU, XLA reference elsewhere).
     """
+
+    packed_backend: str = "auto"
 
     def weight(self, name: str, w: Array) -> Array:
         return w
 
     def act(self, name: str, x: Array) -> Array:
         return x
+
+    def packed_matmul(self, name: str, x: Array, node: Params) -> Array:
+        from ..kernels.qmatmul.ops import from_node, qmm
+
+        x = self.act(name, x)
+        if node["w"].ndim > 2:  # stacked experts: dequant + grouped einsum
+            from ..deploy.pack import dequant_leaf
+
+            w = dequant_leaf(node["w"], node["qscale"], x.shape[-1])
+            return jnp.einsum("...i,...io->...o", x, w.astype(x.dtype))
+        return qmm(x, from_node(node, x.shape[-1]), backend=self.packed_backend)
 
 
 NO_QUANT = QuantHook()
@@ -81,18 +104,18 @@ def dense(ctx: Ctx, p: Params, name: str, x: Array) -> Array:
     """Quant-aware linear: x @ W. The only matmul entry point.
 
     A ``qscale`` sibling marks a packed-int deployment weight
-    (dist.deploy); bits/group are inferred from the shapes.
+    (`repro.deploy` artifact format); it is executed through the quant
+    hook's weight-provider (``packed_matmul`` -> ``qmm``), with bits and
+    group inferred from the shapes.
     """
     node = p[name]
+    path = f"{ctx.scope}/{name}" if ctx.scope else name
     if "qscale" in node:
-        from ..dist.deploy import dequant_leaf
-
-        w = dequant_leaf(node["w"], node["qscale"], x.shape[-1])
+        y = ctx.quant.packed_matmul(path, x, node)
     else:
-        w = ctx.quant.weight(f"{ctx.scope}/{name}" if ctx.scope else name,
-                             node["w"])
-        x = ctx.quant.act(f"{ctx.scope}/{name}" if ctx.scope else name, x)
-    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+        w = ctx.quant.weight(path, node["w"])
+        x = ctx.quant.act(path, x)
+        y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
     if "b" in node:
         y = y + node["b"].astype(y.dtype)
     return y
@@ -171,13 +194,19 @@ def embed_lookup(ctx: Ctx, p: Params, tokens: Array) -> Array:
 
 
 def lm_head(ctx: Ctx, p: Params, x: Array) -> Array:
-    """Output projection to vocab logits; may be tied to the embedding."""
-    if "qscale" in p:
-        from ..dist.deploy import dequant_leaf
+    """Output projection to vocab logits; may be tied to the embedding.
 
-        w = dequant_leaf(p["w"], p["qscale"], x.shape[-1])
-    elif "table_qscale" in p:  # tied to an int8 table: (V, d) -> (d, V)
+    ``p`` is either a head node (``{"w": (d, V)}``, possibly packed with
+    a ``qscale``) or — when embeddings are tied — the embedding node
+    itself (``{"table": (V, d)}``, possibly int8 with ``table_qscale``).
+    """
+    if "qscale" in p:
+        return ctx.quant.packed_matmul("head/w", x, p)
+    if "table_qscale" in p:  # tied to an int8 table: (V, d) -> (d, V)
         w = (p["table"].astype(jnp.float32) * p["table_qscale"][0]).T
+    elif "table" in p:  # tied FP table
+        w = ctx.quant.weight("head/w", p["table"].T)
+        x = ctx.quant.act("head/w", x)
     else:
         w = ctx.quant.weight("head/w", p["w"])  # (d, vocab)
         x = ctx.quant.act("head/w", x)

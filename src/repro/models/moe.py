@@ -92,8 +92,11 @@ def _topk_gates(probs: Array, spec: MoESpec) -> tuple[Array, Array]:
 def _read_w(ctx: Ctx, p, name: str, k: int):
     node = p[name]
     if "qscale" in node:
-        from ..dist.deploy import dequant_leaf
+        from ..deploy.pack import dequant_leaf
 
+        # stacked (E, K, N) expert weights: dequantize transiently (one
+        # layer's experts at a time inside the scan) + grouped einsum;
+        # the 2-D qmm path does not cover the expert-major contraction
         return dequant_leaf(node["w"], node["qscale"], k)
     return ctx.quant.weight(f"{ctx.scope}/{name}", node["w"])
 

@@ -239,7 +239,9 @@ class LM:
 
     def finish(self, params: Params, x: Array, ctx: Ctx) -> Array:
         x = _norm(self.cfg, params["final_norm"], x)
-        head_p = params["head"] if "head" in params else {"w": params["embed"]["table"].T}
+        # tied embeddings pass the embed node itself so lm_head can see a
+        # packed int8 table (table_qscale) and dequantize it correctly
+        head_p = params["head"] if "head" in params else params["embed"]
         return cm.lm_head(ctx, head_p, x)
 
     def forward(self, params: Params, batch: dict, quant: QuantHook = NO_QUANT,

@@ -92,7 +92,7 @@ def test_moe_dense_capacity_agree():
 
 
 def test_deploy_quant_tree_w8_close_to_fp():
-    from repro.dist import deploy
+    from repro import deploy
 
     cfg, model = get_model("tinyllama_1_1b", reduced=True)
     params = model.init(jax.random.PRNGKey(0))

@@ -62,6 +62,46 @@ def test_pack_unpack_identity(bits, rows, cols, seed):
     np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
 
 
+@given(bits=st.sampled_from([2, 3, 4, 8]),
+       rows=st.integers(2, 96),
+       cols=st.integers(1, 16),
+       group=st.sampled_from([None, 4, 8, 32, 64]),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=40, deadline=None)
+def test_deploy_leaf_roundtrip_any_group(bits, rows, cols, group, seed):
+    """rtn_pack_leaf/dequant_leaf round-trips for every (bits, K, group)
+    combination — K not divisible by the group falls back to per-channel
+    scales, K not divisible by the pack factor falls back to an int8
+    container; both must stay value-exact vs the fake-quant reference."""
+    from repro.deploy import dequant_leaf, rtn_pack_leaf
+
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    packed, scales = rtn_pack_leaf(w, bits, group)
+    got = dequant_leaf(packed, scales, rows)
+    g = group if (group and rows % group == 0) else None
+    cfg = QConfig(bits=bits, channel_axis=-1, group_size=g)
+    ref = quantize_dequant(w, init_qstate(w, cfg), cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@given(bits=st.sampled_from([2, 4]), cbits=st.sampled_from([4, 8]),
+       rows=st.integers(1, 8).map(lambda k: k * 8), cols=st.integers(1, 16),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_pack_container_promotion(bits, cbits, rows, cols, seed):
+    """Codes survive storage in any container at least as wide — the
+    invariant mixed-precision stacked leaves depend on."""
+    if cbits < bits:
+        return
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jnp.asarray(rng.integers(lo, hi + 1, size=(rows, cols)), jnp.int8)
+    back = unpack_int(pack_int(q, cbits), cbits, rows)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
 @given(w=weight_matrix(), bits=st.sampled_from([2, 4]))
 @settings(max_examples=30, deadline=None)
 def test_adaround_init_invariants(w, bits):

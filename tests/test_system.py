@@ -34,7 +34,7 @@ def test_paper_claims_w4_w2(tiny_trained):
 
 def test_quantized_generation_runs(tiny_trained):
     cfg, model, params, calib, _, _ = tiny_trained
-    from repro.dist import deploy
+    from repro import deploy
 
     q = deploy.quantize_tree(params, 4)
     B, S = 2, 16
@@ -46,6 +46,8 @@ def test_quantized_generation_runs(tiny_trained):
     # top-1 next-token agreement between FP and W4 serving
     agree = float(jnp.mean((jnp.argmax(logits, -1) == jnp.argmax(lq, -1)).astype(jnp.float32)))
     assert agree >= 0.5, agree
+    # packed weights really are smaller than the FP tree they replace
+    assert deploy.tree_bytes(q) < deploy.tree_bytes(params)
 
 
 def test_input_source_variants(tiny_trained):
