@@ -20,7 +20,7 @@ from repro.core import ReconConfig, quantize
 from repro.core.baselines import quantize_rtn
 from repro.core.evaluate import evaluate
 from repro.data import Corpus, CorpusConfig, make_batches
-from repro.dist import deploy
+from repro import deploy
 from repro.launch import train as train_mod
 from repro.models import get_model
 

@@ -19,6 +19,7 @@ import dataclasses
 from typing import Optional
 
 from ..configs.base import ArchConfig, ShapeSpec
+from ..dist.sharding import estimate_params
 from .hlo import HLOSummary, analyze_module
 
 PEAK_FLOPS = 197e12  # bf16 / chip
@@ -76,8 +77,6 @@ def ideal_serve_bytes(cfg: ArchConfig, shape: ShapeSpec, n_chips: int,
 
 def active_params(cfg: ArchConfig) -> float:
     """Parameters touched per token (MoE: top-k + shared experts only)."""
-    from ..dist.sharding import estimate_params
-
     total = estimate_params(cfg)
     if cfg.moe:
         d = cfg.d_model

@@ -1,0 +1,10 @@
+"""Distribution plane: mesh sharding plans for train / serve steps.
+
+Public API (see :mod:`repro.dist.sharding`):
+  * :class:`Plan` — path-based partition rules over a named mesh for one
+    ``{dp, tp, fsdp, zero3}`` strategy, covering fp *and* packed-int
+    (`repro.deploy`) param trees, optimizer state, batches and KV caches.
+  * :func:`pick_strategy` — default strategy for an (arch, step-kind).
+  * :func:`estimate_params` — exact param count from an ArchConfig.
+"""
+from .sharding import Plan, estimate_params, pick_strategy  # noqa: F401

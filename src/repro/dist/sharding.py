@@ -1,0 +1,400 @@
+"""Mesh sharding plans: path-based partition rules for every step input.
+
+A :class:`Plan` binds a named mesh (axes drawn from ``pod``/``data``/
+``model``), one parallelism strategy and an :class:`ArchConfig`, and
+answers one question for the step builders in ``launch/steps.py``: *how
+is this leaf laid out over the mesh?* Everything is expressed as
+``PartitionSpec`` rules keyed on the leaf's **tree path** and shape — no
+model cooperation needed beyond the repo-wide param conventions
+(``{'w': (K, N)}`` linears, stacked ``(L, ...)`` scan leaves, stacked
+``(E, K, N)`` MoE experts).
+
+Strategies
+----------
+``dp``
+    Params/opt replicated; the batch shards over every mesh axis that
+    divides it (including ``model``, so a pure-DP mesh is fully used).
+``tp``
+    Megatron tensor parallelism over ``model``: column-parallel
+    in-projections (``wq``/``wk``/``wv``/``w_gate``/``w_up``/
+    ``in_proj``/...) shard N, row-parallel out-projections
+    (``wo``/``w_down``/``out_proj``) shard K, norms/biases/gains
+    replicate, the embedding table is vocab-parallel, MoE expert stacks
+    shard E over ``model``. Batch shards over ``pod``+``data``.
+``fsdp``
+    ``tp`` rules plus weight-sharding over ``fsdp_axis`` (default
+    ``data``) on the other matrix dim — 2-D sharded params, gathered by
+    GSPMD where the compute needs them. Expert stacks keep E over
+    ``model`` and put their role dim over ``fsdp_axis``.
+``zero3``
+    No tensor parallelism: every matrix-like leaf shards its largest
+    divisible dim over the *joint* axes tuple (all mesh axes), i.e.
+    ZeRO-3 weight sharding at maximum width.
+
+Packed-int leaves (`repro.deploy` artifact format)
+--------------------------------------------------
+``params_sharding`` recognizes packed nodes (``qscale`` /
+``table_qscale`` sibling) produced by ``deploy.quantize_tree`` — also
+under ``jax.eval_shape``, which is how ``launch/steps.py`` derives
+abstract serving params. Rules:
+
+  * int8 codes ``w: (..., K*cbits/8, N)`` shard along **N only** (plus E
+    for expert stacks). The packed row dim is never sharded: sub-byte
+    unpacking reshapes rows (values interleave across a byte), so a row
+    split is only legal at container granularity — N stays elementwise
+    through dequant and is always safe.
+  * ``qscale`` siblings are small ``(..., G, N)`` f32 — replicated.
+  * the int8 embedding ``table`` keeps the fp vocab-parallel rule (the
+    8-bit container has one row per vocab entry, so gather + per-channel
+    dequant are unchanged); ``table_qscale`` replicates.
+  * int8-container fallbacks (ragged K, widths not dividing 8) change
+    only the row count, which is never sharded — the rules stay legal.
+
+Every axis assignment is guarded by divisibility; a dim that does not
+divide the axis size falls back to replication instead of failing, so
+reduced configs lower on any placeholder mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+Params = Any
+
+STRATEGIES = ("dp", "tp", "fsdp", "zero3")
+
+# parent-node names classifying a {'w': ...} leaf's matmul role.
+COL_PARENTS = frozenset({
+    "wq", "wk", "wv",            # attention / mlstm in-projections
+    "w_gate", "w_up",            # (shared-)MLP in-projections
+    "in_proj", "w_in", "w_if",   # ssm / xlstm fused in-projections
+    "w_dt", "wB", "wC",          # mamba coefficient projections
+    "head",                      # lm head: (d, V), vocab is the out dim
+})
+ROW_PARENTS = frozenset({"wo", "w_down", "out_proj"})
+EXPERT_PARENTS = frozenset({"w_gate", "w_up", "w_down"})
+
+_SEQ_TILE = 128  # minimum per-shard seq chunk for sequence parallelism
+
+
+def _keys(path: Sequence[Any]) -> tuple[str, ...]:
+    """Key path -> plain strings (accepts jax DictKeys or any object
+    with a ``.key`` attribute, e.g. the step builders' fake keys)."""
+    return tuple(str(getattr(k, "key", k)) for k in path)
+
+
+@dataclasses.dataclass
+class Plan:
+    """Sharding plan: (mesh, strategy, arch) -> per-leaf PartitionSpecs.
+
+    Args:
+      mesh: named device mesh; axes from ``("pod", "data", "model")``.
+      strategy: one of :data:`STRATEGIES`.
+      cfg: the architecture the plan serves (used by :func:`pick_strategy`
+        callers and kept for provenance in dry-run artifacts).
+      fsdp_axis: axis weight-sharding uses under ``fsdp``.
+      shard_experts: shard stacked MoE expert dims over ``model``.
+      seq_parallel: sequence-shard block-boundary activations over
+        ``model`` for tp/fsdp when the seq length tiles (see
+        ``launch/steps.act_shard_fn``).
+    """
+
+    mesh: Mesh
+    strategy: str
+    cfg: ArchConfig
+    fsdp_axis: str = "data"
+    shard_experts: bool = True
+    seq_parallel: bool = True
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"expected one of {STRATEGIES}")
+        if self.strategy == "fsdp" and self.fsdp_axis not in self.mesh.shape:
+            raise ValueError(f"fsdp_axis {self.fsdp_axis!r} not a mesh axis "
+                             f"{tuple(self.mesh.shape)}")
+
+    # -- mesh helpers --------------------------------------------------------
+
+    def _axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            if a not in self.mesh.shape:
+                return 0
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def _model_size(self) -> int:
+        return self.mesh.shape.get("model", 0)
+
+    def _replicated(self, ndim: int) -> P:
+        return P(*([None] * ndim))
+
+    # -- batch ---------------------------------------------------------------
+
+    def batch_axes(self, global_batch: int) -> tuple[str, ...]:
+        """Mesh axes the batch dim shards over, in mesh order, greedily
+        keeping the joint product a divisor of ``global_batch``."""
+        if self.strategy == "dp":
+            cand = self.mesh.axis_names
+        else:
+            cand = tuple(a for a in self.mesh.axis_names if a in ("pod", "data"))
+        axes: list[str] = []
+        prod = 1
+        for a in cand:
+            n = self.mesh.shape[a]
+            if n > 1 and global_batch % (prod * n) == 0:
+                axes.append(a)
+                prod *= n
+        return tuple(axes)
+
+    def _seq_shard_ok(self, seq_len: int, baxes: tuple[str, ...]) -> bool:
+        return (self.seq_parallel and self.strategy in ("tp", "fsdp")
+                and self._model_size > 1 and "model" not in baxes
+                and seq_len > 0
+                and seq_len % (self._model_size * _SEQ_TILE) == 0)
+
+    def batch_spec(self, global_batch: int, ndim: int,
+                   seq_axis: int = 1, seq_len: int = 0) -> P:
+        """Spec for one batch leaf: dim 0 over :meth:`batch_axes`;
+        optionally dim ``seq_axis`` over ``model`` (sequence parallelism)
+        when ``seq_len`` tiles over the model axis."""
+        baxes = self.batch_axes(global_batch)
+        spec: list[Any] = [None] * ndim
+        spec[0] = baxes if baxes else None
+        if 0 < seq_axis < ndim and self._seq_shard_ok(seq_len, baxes):
+            spec[seq_axis] = "model"
+        return P(*spec)
+
+    def batch_sharding(self, batch: Params, global_batch: int,
+                       shard_seq: bool = True) -> Params:
+        """NamedShardings for a batch pytree (tokens / patches / frames):
+        batch dim over the data axes, seq dim over ``model`` when
+        ``shard_seq`` and the length tiles."""
+
+        def leaf(x):
+            ndim = len(x.shape)
+            seq_len = x.shape[1] if (shard_seq and ndim >= 2) else 0
+            return NamedSharding(
+                self.mesh, self.batch_spec(global_batch, ndim, 1, seq_len))
+
+        return jax.tree.map(leaf, batch)
+
+    # -- params --------------------------------------------------------------
+
+    def param_spec(self, path: Sequence[Any], shape: Sequence[int]) -> P:
+        """PartitionSpec for one fp param leaf, from its tree path.
+
+        ``path`` is a key path (jax ``DictKey``-likes); ``shape`` the
+        global leaf shape, leading scan-stack dim included.
+        """
+        return self._param_spec(_keys(path), tuple(shape))
+
+    def _param_spec(self, keys: tuple[str, ...], shape: tuple[int, ...]) -> P:
+        ndim = len(shape)
+        spec: list[Any] = [None] * ndim
+        leaf = keys[-1] if keys else ""
+        parent = keys[-2] if len(keys) > 1 else ""
+        gparent = keys[-3] if len(keys) > 2 else ""
+        if self.strategy == "dp" or ndim < 2:
+            return P(*spec)
+        if leaf in ("qscale", "table_qscale") or parent == "router":
+            return P(*spec)  # scales replicate; the MoE router stays FP+small
+
+        if leaf == "table":  # embedding: vocab-parallel (megatron)
+            return self._matrix_spec(spec, shape, role_dim=ndim - 2,
+                                     other_dim=ndim - 1)
+        if leaf != "w":
+            return P(*spec)  # norms, biases, gates, convs, pos tables
+
+        if (parent in EXPERT_PARENTS and gparent == "moe" and ndim >= 3):
+            return self._expert_spec(spec, shape, parent)
+        if parent in COL_PARENTS:
+            return self._matrix_spec(spec, shape, role_dim=ndim - 1,
+                                     other_dim=ndim - 2)
+        if parent in ROW_PARENTS:
+            return self._matrix_spec(spec, shape, role_dim=ndim - 2,
+                                     other_dim=ndim - 1)
+        return P(*spec)  # unknown weight: replicate rather than guess
+
+    def _zero3_spec(self, spec: list, shape: tuple[int, ...]) -> P:
+        joint = tuple(self.mesh.axis_names)
+        size = self._axis_size(joint)
+        for dim in sorted(range(len(shape)), key=lambda d: -shape[d]):
+            if size > 1 and shape[dim] % size == 0:
+                spec[dim] = joint
+                break
+        return P(*spec)
+
+    def _matrix_spec(self, spec: list, shape: tuple[int, ...],
+                     role_dim: int, other_dim: int) -> P:
+        """tp: role dim over ``model``; fsdp: + other dim over
+        ``fsdp_axis``; zero3: largest divisible dim over the joint axes."""
+        if self.strategy == "zero3":
+            return self._zero3_spec(spec, shape)
+        if self._model_size > 1 and shape[role_dim] % self._model_size == 0:
+            spec[role_dim] = "model"
+        if self.strategy == "fsdp" and self.fsdp_axis != "model":
+            fs = self._axis_size(self.fsdp_axis)
+            if fs > 1 and shape[other_dim] % fs == 0:
+                spec[other_dim] = self.fsdp_axis
+        return P(*spec)
+
+    def _expert_spec(self, spec: list, shape: tuple[int, ...],
+                     parent: str) -> P:
+        """Stacked experts ``(..., E, K, N)``: E over ``model`` (EP);
+        fsdp additionally shards the role dim over ``fsdp_axis``."""
+        ndim = len(shape)
+        if self.strategy == "zero3":
+            return self._zero3_spec(spec, shape)
+        e_dim = ndim - 3
+        role_dim = ndim - 2 if parent in ROW_PARENTS else ndim - 1
+        other_dim = ndim - 1 if role_dim == ndim - 2 else ndim - 2
+        e_sharded = (self.shard_experts and self._model_size > 1
+                     and shape[e_dim] % self._model_size == 0)
+        if e_sharded:
+            spec[e_dim] = "model"
+        elif self._model_size > 1 and shape[role_dim] % self._model_size == 0:
+            spec[role_dim] = "model"  # EP off/impossible: plain tp rule
+        if self.strategy == "fsdp" and self.fsdp_axis != "model":
+            fs = self._axis_size(self.fsdp_axis)
+            dim = role_dim if e_sharded else other_dim
+            if fs > 1 and shape[dim] % fs == 0 and spec[dim] is None:
+                spec[dim] = self.fsdp_axis
+        return P(*spec)
+
+    def _packed_spec(self, keys: tuple[str, ...], shape: tuple[int, ...]) -> P:
+        """Spec for packed int8 codes: N (and E) only — see module doc."""
+        ndim = len(shape)
+        spec: list[Any] = [None] * ndim
+        parent = keys[-2] if len(keys) > 1 else ""
+        gparent = keys[-3] if len(keys) > 2 else ""
+        if self.strategy == "dp" or ndim < 2:
+            return P(*spec)
+        if self.strategy == "zero3":
+            joint = tuple(self.mesh.axis_names)
+            size = self._axis_size(joint)
+            if size > 1 and shape[-1] % size == 0:
+                spec[-1] = joint
+            return P(*spec)
+        n_axis = "model"
+        if (parent in EXPERT_PARENTS and gparent == "moe" and ndim >= 3
+                and self.shard_experts and self._model_size > 1
+                and shape[ndim - 3] % self._model_size == 0):
+            spec[ndim - 3] = "model"
+            n_axis = self.fsdp_axis if self.strategy == "fsdp" else None
+        if (n_axis and self._axis_size(n_axis) > 1
+                and shape[-1] % self._axis_size(n_axis) == 0):
+            spec[-1] = n_axis
+        return P(*spec)
+
+    def params_sharding(self, params: Params) -> Params:
+        """NamedShardings for a whole param tree — fp or packed.
+
+        Accepts concrete arrays or ``ShapeDtypeStruct`` trees (e.g.
+        ``jax.eval_shape(deploy.quantize_tree)`` output from the serving
+        path). Packed nodes are detected by their ``qscale`` /
+        ``table_qscale`` sibling and get the packed-leaf rules.
+        """
+
+        def walk(node, keypath):
+            if not isinstance(node, dict):
+                return NamedSharding(
+                    self.mesh, self._param_spec(keypath, tuple(node.shape)))
+            if "qscale" in node or "table_qscale" in node:
+                out = {}
+                for k, v in node.items():
+                    if k == "w":
+                        spec = self._packed_spec(keypath + (k,), tuple(v.shape))
+                    elif k == "table":
+                        spec = self._param_spec(keypath + (k,), tuple(v.shape))
+                    else:  # qscale / table_qscale / bias: small, replicated
+                        spec = self._replicated(len(v.shape))
+                    out[k] = NamedSharding(self.mesh, spec)
+                return out
+            return {k: walk(v, keypath + (k,)) for k, v in node.items()}
+
+        return walk(params, ())
+
+    def opt_sharding(self, opt_tree: Params) -> Params:
+        """Optimizer-moment trees mirror the param tree layout."""
+        return self.params_sharding(opt_tree)
+
+    # -- caches --------------------------------------------------------------
+
+    def cache_spec(self, path: Sequence[Any], shape: Sequence[int],
+                   global_batch: int) -> P:
+        """Spec for one stacked cache leaf ``(L, B, ...)``: batch dim over
+        the data axes; the largest trailing dim (seq slots for KV caches,
+        the inner dim for recurrent states) over ``model`` when free and
+        divisible. ``path`` is accepted for rule-engine symmetry."""
+        del path  # shape-driven; kept for API symmetry with param_spec
+        return self._cache_spec(tuple(shape), global_batch)
+
+    def _cache_spec(self, shape: tuple[int, ...], global_batch: int) -> P:
+        ndim = len(shape)
+        spec: list[Any] = [None] * ndim
+        if ndim < 2:
+            return P(*spec)
+        baxes = self.batch_axes(shape[1] if shape[1] else global_batch)
+        spec[1] = baxes if baxes else None
+        if ndim >= 3 and self._model_size > 1 and "model" not in baxes:
+            j = max(range(2, ndim), key=lambda d: shape[d])
+            if shape[j] % self._model_size == 0:
+                spec[j] = "model"
+        return P(*spec)
+
+    def cache_sharding(self, cache: Params, global_batch: int) -> Params:
+        """NamedShardings for a KV/state cache pytree."""
+        return jax.tree.map(
+            lambda x: NamedSharding(
+                self.mesh, self._cache_spec(tuple(x.shape), global_batch)),
+            cache)
+
+
+# ---------------------------------------------------------------------------
+# strategy selection + param counting
+# ---------------------------------------------------------------------------
+
+
+def pick_strategy(cfg: ArchConfig, kind: str) -> str:
+    """Default strategy for an (arch, step-kind) cell.
+
+    Serving (prefill/decode) always runs tensor-parallel: weights stay
+    resident over ``model`` and the small per-step batch shards over the
+    data axes. Training is data-parallel for models that fit replicated
+    and fsdp for MoE / multi-billion-param models.
+    """
+    if kind in ("prefill", "decode"):
+        return "tp"
+    if cfg.moe is not None or estimate_params(cfg) > 2e9:
+        return "fsdp"
+    return "dp"
+
+
+@lru_cache(maxsize=None)
+def _count_params(cfg: ArchConfig) -> float:
+    from ..models.registry import build_model
+
+    model = build_model(cfg)
+    sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return float(sum(math.prod(leaf.shape) for leaf in jax.tree.leaves(sds)))
+
+
+def estimate_params(cfg: ArchConfig) -> float:
+    """Exact parameter count for a config: the model's own ``init`` traced
+    under ``jax.eval_shape`` (shapes only — no allocation), cached per
+    config. Consumed by the roofline's MODEL_FLOPS and strategy picking."""
+    return _count_params(cfg)

@@ -1,10 +1,15 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512").strip()
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST stay first: jax locks the device count at first
-init, and the production meshes need 512 placeholder devices.
+The lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder devices. An
+externally-set device count wins (the CI ``dryrun-smoke`` job and
+``tests/test_dist.py`` run ``--reduced`` cells with 8 devices);
+unrelated XLA_FLAGS are preserved, with the 512 default appended.
 
 Per cell this emits artifacts/dryrun/<arch>_<shape>_<mesh>[_tag].json:
   * compiled.memory_analysis()  (proves per-chip fit)
@@ -30,7 +35,11 @@ def parse_args(argv=None):
     p.add_argument("--arch", type=str, default=None)
     p.add_argument("--shape", type=str, default=None)
     p.add_argument("--mesh", choices=["single", "multi"], default="single")
-    p.add_argument("--strategy", choices=["auto", "dp", "tp", "fsdp"], default="auto")
+    p.add_argument("--reduced", action="store_true",
+                   help="reduced arch + toy shape on a host mesh built from "
+                        "whatever devices exist (CI smoke / tests)")
+    p.add_argument("--strategy", choices=["auto", "dp", "tp", "fsdp", "zero3"],
+                   default="auto")
     p.add_argument("--quant", type=int, default=None, choices=[2, 4, 8],
                    help="serve with packed int weights at this bit-width")
     p.add_argument("--group", type=int, default=None, help="weight group size")
@@ -55,11 +64,19 @@ def run_cell(args) -> dict:
     from ..dist.sharding import Plan, pick_strategy
     from ..models import get_model
     from . import steps as steps_mod
-    from .mesh import make_production_mesh
+    from .mesh import make_host_mesh, make_production_mesh
 
-    cfg, model = get_model(args.arch, moe_impl=args.moe_impl)
+    cfg, model = get_model(args.arch, reduced=args.reduced,
+                           moe_impl=args.moe_impl)
     shape = SHAPES[args.shape]
-    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    if args.reduced:
+        shape = dataclasses.replace(shape,
+                                    global_batch=min(shape.global_batch, 8),
+                                    seq_len=min(shape.seq_len, 64))
+        n_dev = len(jax.devices())
+        mesh = make_host_mesh(model=2 if n_dev % 2 == 0 else 1)
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
     strategy = (pick_strategy(cfg, shape.kind) if args.strategy == "auto"
                 else args.strategy)
     plan = Plan(mesh=mesh, strategy=strategy, cfg=cfg,
@@ -102,6 +119,7 @@ def run_cell(args) -> dict:
     per_chip_tpu = per_chip_hbm - cpu_excess
     out = {
         "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+        "reduced": args.reduced,
         "n_chips": n_chips, "strategy": strategy, "kind": shape.kind,
         "quant": args.quant, "group": args.group, "remat": args.remat,
         "moe_impl": args.moe_impl, "tag": args.tag,

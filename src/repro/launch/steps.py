@@ -16,13 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ShapeSpec
 from .. import deploy
-
-try:
-    from ..dist.sharding import Plan
-except ModuleNotFoundError:  # mesh-sharding layer: planned subsystem (ROADMAP)
-    # step builders need a real Plan instance from the caller to run;
-    # keep the module importable (deploy/_serve_params work without it)
-    Plan = Any  # type: ignore[assignment,misc]
+from ..dist.sharding import Plan
 from ..optim import adam
 from . import specs as specs_mod
 

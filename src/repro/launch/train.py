@@ -51,7 +51,14 @@ def parse_args(argv=None):
                    help="model-axis size of the host mesh")
     p.add_argument("--log-every", type=int, default=20)
     p.add_argument("--metrics-out", default=None)
-    return p.parse_args(argv)
+    args = p.parse_args(argv)
+    if args.grad_compress == "int8" and args.model_shard > 1:
+        # the int8 all-reduce step is DP-only: it shard_maps over the
+        # "data" axis and would silently ignore a model axis (see
+        # optim/grad_compress.py for the documented trade-off)
+        p.error("--grad-compress int8 is DP-only and ignores a model axis; "
+                "use --model-shard 1 or --grad-compress none")
+    return args
 
 
 def main(argv=None):
@@ -92,8 +99,10 @@ def main(argv=None):
     watchdog = StepWatchdog()
     shutdown = GracefulShutdown()
     losses = []
+    last_step = start_step  # stays put when resuming at/after completion
     t_start = time.time()
     for step in range(start_step, args.steps):
+        last_step = step + 1
         batch = make_batches(corpus, 1, args.batch, args.seq, seed=args.seed,
                              host=host, start_step=step, extras_fn=extras_fn)[0]
         watchdog.start()
@@ -116,8 +125,10 @@ def main(argv=None):
             break
     if ckpt is not None:
         ckpt.wait()
-        ckpt.save(min(args.steps, step + 1), {"params": params, "opt": opt_state},
-                  meta={"loss": losses[-1] if losses else None, "arch": args.arch})
+        if losses:  # no steps ran -> the restored checkpoint already covers it
+            ckpt.save(min(args.steps, last_step),
+                      {"params": params, "opt": opt_state},
+                      meta={"loss": losses[-1], "arch": args.arch})
     wall = time.time() - t_start
     print(f"done: {len(losses)} steps in {wall:.0f}s, "
           f"final loss {losses[-1]:.4f}" if losses else "no steps run")

@@ -20,11 +20,21 @@ from __future__ import annotations
 from functools import partial
 from typing import Any
 
+import inspect
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import adam
+
+# jax >= 0.6 exposes jax.shard_map (check_vma=); 0.4.x has the
+# experimental module (check_rep=). Resolve both once here.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+_CHECK_KW = ("check_vma" if "check_vma" in
+             inspect.signature(_shard_map).parameters else "check_rep")
 
 Params = Any
 
@@ -64,12 +74,11 @@ def make_dp_train_step(model, mesh: Mesh, acfg: adam.AdamConfig,
             return params2, opt2, err2, loss
 
         rep = P()
-        bspec = jax.tree.map(lambda _: P(axis), batch)
-        return jax.shard_map(
+        return _shard_map(
             inner, mesh=mesh,
             in_specs=(rep, rep, rep, P(axis)),
             out_specs=(rep, rep, rep, rep),
-            check_vma=False,
+            **{_CHECK_KW: False},
         )(params, opt_state, err, batch)
 
     return jax.jit(step, donate_argnums=(0, 1, 2))

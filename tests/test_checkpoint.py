@@ -80,5 +80,10 @@ def test_train_resume_cli(tmp_path):
     cm = CheckpointManager(tmp_path)
     assert cm.latest_step() == 6
     # extend the run: resumes from 6, trains to 8
-    main([a if a != "6" else "8" for a in args])
+    args8 = [a if a != "6" else "8" for a in args]
+    main(args8)
+    assert CheckpointManager(tmp_path).latest_step() == 8
+    # resume at completion: start_step == steps, the loop never runs —
+    # must exit cleanly (regression: NameError on the final save)
+    main(args8)
     assert CheckpointManager(tmp_path).latest_step() == 8

@@ -57,6 +57,90 @@ def test_param_specs_unit():
     assert "unit ok" in run_subprocess(code)
 
 
+def test_packed_param_rules_unit():
+    """Partition rules for packed-int (`repro.deploy`) leaves: codes shard
+    along N (plus E for expert stacks), the packed row dim never shards,
+    qscale siblings replicate, and eval_shape(quantize_tree) trees flow
+    through params_sharding — incl. the int8-container (W3) fallback."""
+    code = """
+    import jax, jax.numpy as jnp
+    from repro import deploy
+    from repro.dist.sharding import Plan
+    from repro.launch import specs as specs_mod
+    from repro.models import get_model
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg, model = get_model("tinyllama_1_1b", reduced=True)
+    plan = Plan(mesh=mesh, strategy="tp", cfg=cfg)
+    params = specs_mod.params_specs(model)
+    packed = jax.eval_shape(lambda p: deploy.quantize_tree(p, 4, 64), params)
+
+    sh = plan.params_sharding(packed)
+    attn = packed["body"]["sub0"]["attn"]
+    assert attn["wq"]["w"].dtype == jnp.int8
+    ash = sh["body"]["sub0"]["attn"]
+    # codes: N over model; packed K rows never shard (even row-parallel wo)
+    assert ash["wq"]["w"].spec[-1] == "model", ash["wq"]["w"].spec
+    assert ash["wo"]["w"].spec[-1] == "model" and ash["wo"]["w"].spec[-2] is None
+    # qscale siblings replicate
+    assert all(s is None for s in ash["wq"]["qscale"].spec)
+    # int8 embedding table keeps the vocab-parallel rule, its scale replicates
+    assert sh["embed"]["table"].spec[0] == "model", sh["embed"]["table"].spec
+    assert all(s is None for s in sh["embed"]["table_qscale"].spec)
+
+    # W3 falls back to an int8 container (rows == K) and stays shardable
+    packed3 = jax.eval_shape(lambda p: deploy.quantize_tree(p, 3, None), params)
+    w3 = packed3["body"]["sub0"]["attn"]["wq"]["w"]
+    assert w3.shape[-2] == params["body"]["sub0"]["attn"]["wq"]["w"].shape[-2]
+    sh3 = plan.params_sharding(packed3)
+    assert sh3["body"]["sub0"]["attn"]["wq"]["w"].spec[-1] == "model"
+
+    # packed MoE experts: E over model, N over the fsdp axis, router FP
+    cfg2, model2 = get_model("qwen3_moe_235b_a22b", reduced=True)
+    plan2 = Plan(mesh=mesh, strategy="fsdp", cfg=cfg2)
+    p2 = specs_mod.params_specs(model2)
+    pk2 = jax.eval_shape(lambda p: deploy.quantize_tree(p, 4, None), p2)
+    moe = pk2["moe"]["sub0"]["moe"]
+    assert "qscale" not in moe["router"] and "qscale" in moe["w_gate"]
+    msh = plan2.params_sharding(pk2)["moe"]["sub0"]["moe"]
+    wsh = msh["w_gate"]["w"].spec
+    assert wsh[1] == "model" and wsh[-1] == "data", wsh
+    assert all(s is None for s in msh["w_gate"]["qscale"].spec)
+    print("packed rules ok")
+    """
+    assert "packed rules ok" in run_subprocess(code)
+
+
+def test_dryrun_reduced_quant_decode_cell(tmp_path):
+    """The dry-run CLI lowers + compiles a reduced --quant 4 decode cell
+    (packed int codes through params_sharding) on an 8-device host mesh."""
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "HOME": "/root"}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--reduced",
+         "--arch", "tinyllama_1_1b", "--shape", "decode_32k",
+         "--mesh", "single", "--quant", "4", "--group", "64",
+         "--tag", "w4", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(
+        (tmp_path / "tinyllama_1_1b_decode_32k_single_w4.json").read_text())
+    assert out["reduced"] and out["quant"] == 4 and out["n_chips"] == 8
+    assert out["memory_analysis"]  # compiled.memory_analysis() was real
+
+
+def test_train_rejects_int8_compress_with_model_shard():
+    """--grad-compress int8 runs a DP-only shard_map; combining it with a
+    model axis must be rejected up front, not silently ignored."""
+    from repro.launch.train import parse_args
+
+    with pytest.raises(SystemExit):
+        parse_args(["--grad-compress", "int8", "--model-shard", "2"])
+    args = parse_args(["--grad-compress", "int8", "--model-shard", "1"])
+    assert args.grad_compress == "int8"
+
+
 def test_tp_train_step_executes():
     """One real train step on a (4,2) mesh: loss finite, params updated,
     shardings as planned."""
