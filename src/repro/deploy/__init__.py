@@ -9,5 +9,6 @@ Public API:
     models' packed-weight path and the launch layer.
 """
 from .artifact import QuantizedArtifact, export, rtn_artifact  # noqa: F401
-from .pack import (container_bits, dequant_leaf, pack_codes,  # noqa: F401
-                   quantize_tree, rtn_bits_by_path, rtn_pack_leaf, tree_bytes)
+from .pack import (code_layout, container_bits, dequant_leaf,  # noqa: F401
+                   pack_codes, quantize_tree, rtn_bits_by_path, rtn_pack_leaf,
+                   tree_bytes)

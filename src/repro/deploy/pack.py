@@ -62,15 +62,40 @@ def pack_codes(codes: Array, k: int, bits: int) -> Array:
     return pack_int(codes, container_bits(bits, k), axis=-2)
 
 
+def code_layout(wp: Array, k: int) -> tuple[int, int]:
+    """(container bits, values-per-byte) of a packed codes leaf.
+
+    The single shape→layout inference shared by :func:`dequant_leaf` and
+    the qmm tier dispatcher (``kernels.qmatmul.ops.from_node``): ``k``
+    is the reduction dim known from the activation, ``wp`` stores
+    ``k * bits / 8`` rows along axis -2. Raises ``ValueError`` when the
+    row count cannot be a packed view of ``k`` — callers attach the
+    node path.
+    """
+    rows = wp.shape[-2]
+    if rows == 0 or k % rows:
+        raise ValueError(
+            f"{rows} packed rows do not divide the reduction dim K={k} "
+            f"(codes shape {wp.shape})")
+    per = k // rows
+    if per not in (1, 2, 4):
+        raise ValueError(
+            f"{per} values/byte is not a packable container width "
+            f"(codes shape {wp.shape}, K={k}); expected 1, 2 or 4")
+    return 8 // per, per
+
+
 def dequant_leaf(wp: Array, qscale: Array, k: int) -> Array:
     """Packed node -> f32 weights. ``k`` is the original reduction dim.
 
     wp: (…, K * cbits/8, N) int8; qscale: (…, G, N) f32 broadcastable
     against the leading dims. Bits and group size are inferred from the
-    shapes (``per = K // rows``, ``group = K // G``).
+    shapes (``per = K // rows``, ``group = K // G``). This is the
+    *reference* leaf view — serving never calls it per step: 2-D nodes
+    run the ``qmm`` decode/prefill tiers and stacked (E, …) expert nodes
+    the grouped tier, both dequantizing tile-wise in-kernel.
     """
-    per = k // wp.shape[-2]
-    bits = 8 // per
+    bits, _ = code_layout(wp, k)
     codes = unpack_int(wp, bits, k, axis=-2).astype(jnp.float32)
     g_rows = qscale.shape[-2]
     n = codes.shape[-1]

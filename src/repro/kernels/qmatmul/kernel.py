@@ -1,10 +1,17 @@
-"""Packed-int weight dequant-matmul Pallas TPU kernel.
+"""Packed-int weight dequant-matmul Pallas TPU kernels.
 
-The serving GEMM for BRECQ-quantized models: weights live in HBM as
+The serving GEMMs for BRECQ-quantized models: weights live in HBM as
 packed int2/int4/int8 codes (offset-binary, packed along the reduction
-axis) with per-group scales; the kernel streams (bk, bn) weight tiles
-into VMEM, unpacks + dequantizes in-register, and accumulates on the MXU
-in f32.
+axis) with per-group scales; the kernels stream (bk, bn) weight tiles
+into VMEM, unpack + dequantize in-register, and accumulate on the MXU
+in f32. Three entry points, one per serving tier (see ``ops.qmm``):
+
+  qmatmul          prefill GEMM — grid over (M, N, K) tiles
+  qgemv            decode GEMV — M = batch rows (<= 8), no M grid and no
+                   M padding; scale-major k loop (scales applied to the
+                   (M, bn) partial sum, not the (bk, bn) weight tile)
+  qmatmul_grouped  stacked MoE experts — qgemv's schedule with a leading
+                   expert grid dim consuming (E, K/per, N) nodes directly
 
 Tiling (VMEM working set per step, defaults bm=bn=128, bk=group):
   x tile      (bm, bk)            bf16/f32
@@ -13,7 +20,8 @@ Tiling (VMEM working set per step, defaults bm=bn=128, bk=group):
   acc scratch (bm, bn) f32
 
 Constraint: group_size == bk (one scale row per k-tile), or per-channel
-scales (scales shape (1, N)). MXU dims stay multiples of 128.
+scales (scales shape (1, N)). MXU dims stay multiples of 128 on the
+prefill tier; the decode tiers keep M at the true row count.
 """
 from __future__ import annotations
 
@@ -50,6 +58,13 @@ def _unpack_tile(wp: Array, bits: int) -> Array:
     return codes.astype(jnp.float32)
 
 
+def _pick_bk(K: int, G: int, per: int) -> tuple[int, int]:
+    """(bk, nk): one scale group per k-step, or a 512 cap per-channel."""
+    bk = min(K, 512) if G == 1 else K // G
+    assert K % bk == 0 and bk % per == 0, (K, bk, per)
+    return bk, K // bk
+
+
 def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
     k = pl.program_id(2)
 
@@ -77,12 +92,7 @@ def qmatmul(x: Array, w_packed: Array, scales: Array, *, bits: int,
     N = w_packed.shape[1]
     G = scales.shape[0]
     assert w_packed.shape[0] * per == K, (w_packed.shape, K, bits)
-    if G == 1:
-        bk = min(K, 512)
-    else:
-        bk = K // G  # one scale group per k-step
-    assert K % bk == 0 and bk % per == 0, (K, bk, per)
-    nk = K // bk
+    bk, nk = _pick_bk(K, G, per)
     bm = min(bm, M)
     bn = min(bn, N)
     assert M % bm == 0 and N % bn == 0, (M, bm, N, bn)
@@ -98,6 +108,127 @@ def qmatmul(x: Array, w_packed: Array, scales: Array, *, bits: int,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed, scales)
+
+
+def _qgemv_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
+    """Decode GEMV step: dot raw codes, then scale the (M, bn) partial.
+
+    The scale row is uniform within the k-step's group, so
+    ``(x @ (codes * s)) == (x @ codes) * s`` exactly — applying it after
+    the dot turns bk*bn dequant multiplies into M*bn (M <= 8), and the
+    f32 dequantized weight tile never exists, in VMEM or HBM.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = _unpack_tile(w_ref[...], bits)  # (bk, bn), centred f32 codes
+    part = jax.lax.dot(x_ref[...].astype(jnp.float32), codes,
+                       preferred_element_type=jnp.float32)
+    acc_ref[...] += part * s_ref[...].astype(jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bn", "interpret"))
+def qgemv(x: Array, w_packed: Array, scales: Array, *, bits: int,
+          bn: int = 128, interpret: bool = True) -> Array:
+    """Decode-shaped x (M, K) @ dequant(w_packed, scales) -> (M, N).
+
+    M is the decode batch (a handful of rows): the whole M extent is one
+    skinny block — no M grid dim and no zero-row padding to the 8/128
+    sublane tile. The grid is (N tiles, k steps) with k innermost
+    ("scale-major": the k-loop walks scale groups while the (M, bn)
+    accumulator stays resident in VMEM), and each step applies its scale
+    row to the partial sum instead of the weight tile.
+    """
+    per = 8 // bits
+    M, K = x.shape
+    N = w_packed.shape[1]
+    G = scales.shape[0]
+    assert w_packed.shape[0] * per == K, (w_packed.shape, K, bits)
+    bk, nk = _pick_bk(K, G, per)
+    bn = min(bn, N)
+    assert N % bn == 0, (N, bn)
+
+    grid = (N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_qgemv_kernel, bits=bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M, bk), lambda j, k: (0, k)),
+            pl.BlockSpec((bk // per, bn), lambda j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda j, k: (k if G > 1 else 0, j)),
+        ],
+        out_specs=pl.BlockSpec((M, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((M, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed, scales)
+
+
+def _qmm_grouped_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int,
+                        nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = _unpack_tile(w_ref[0], bits)  # (bk, bn)
+    part = jax.lax.dot(x_ref[0].astype(jnp.float32), codes,
+                       preferred_element_type=jnp.float32)
+    acc_ref[...] += part * s_ref[0].astype(jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "interpret"))
+def qmatmul_grouped(x: Array, w_packed: Array, scales: Array, *, bits: int,
+                    bm: int = 128, bn: int = 128,
+                    interpret: bool = True) -> Array:
+    """Grouped expert GEMM: x (E, M, K) @ dequant((E, K/per, N)) -> (E, M, N).
+
+    The expert dim is the leading (outermost) grid axis, so each
+    expert's packed codes stream through VMEM exactly once per call —
+    the stacked node is consumed directly and no (E, K, N) dequantized
+    copy ever exists. Per-expert scheduling and the scale-after-dot
+    trick match :func:`qgemv`; M (tokens routed per expert) keeps the
+    true row count when it is at most one sublane tile.
+    """
+    per = 8 // bits
+    E, M, K = x.shape
+    N = w_packed.shape[2]
+    G = scales.shape[1]
+    assert w_packed.shape[0] == E and scales.shape[0] == E, (
+        x.shape, w_packed.shape, scales.shape)
+    assert w_packed.shape[1] * per == K, (w_packed.shape, K, bits)
+    bk, nk = _pick_bk(K, G, per)
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0, (M, bm, N, bn)
+
+    grid = (E, M // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_qmm_grouped_kernel, bits=bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk // per, bn), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, 1, bn),
+                         lambda e, i, j, k: (e, k if G > 1 else 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w_packed, scales)

@@ -1,9 +1,21 @@
-"""Public jit'd wrapper for the packed dequant-matmul.
+"""Public jit'd wrapper + shape-driven tier dispatcher for the packed
+dequant-matmul.
 
 ``qmm(x, qw)`` consumes a :class:`QuantizedLinear` produced from BRECQ
-output (pack_weights). On CPU this runs the Pallas kernel in interpret
-mode (correctness) or the XLA reference (speed); on TPU it compiles the
-Pallas kernel.
+output (pack_weights / from_node) and routes it to one of three
+execution tiers by shape alone — callers (``QuantHook.packed_matmul``,
+``launch/serve.py``, the dryrun decode cells) never pick a kernel:
+
+  decode    M <= DECODE_M_MAX rows (a decode step's batch): the skinny
+            ``qgemv`` kernel — no zero-row padding of M up to the 8/128
+            sublane tile, scales applied to the partial sums.
+  prefill   everything else 2-D: the tiled ``qmatmul`` GEMM.
+  grouped   stacked expert nodes (packed.ndim == 3): ``qmatmul_grouped``
+            over (E, K*bits/8, N), one expert grid step at a time.
+
+On CPU each tier runs its XLA reference (the Pallas kernels are
+exercised in interpret mode by tests); on TPU the Pallas kernels
+compile. ``backend`` / ``QuantHook.packed_backend`` still forces a path.
 """
 from __future__ import annotations
 
@@ -13,19 +25,46 @@ import jax
 import jax.numpy as jnp
 
 from ...core.quantizer import pack_int
-from .kernel import qmatmul
-from .ref import qmatmul_ref
+from .kernel import qgemv, qmatmul, qmatmul_grouped
+from .ref import (qgemv_ref, qmatmul_ref, qmm_grouped_dense_ref,
+                  qmm_grouped_ref)
 
 Array = jax.Array
+
+# Largest row count served by the decode tier: one f32 sublane tile.
+# Decode steps are M = batch rows; beyond 8 rows the MXU-tiled prefill
+# GEMM wins anyway, so the gemv specialization stops paying.
+DECODE_M_MAX = 8
+
+# Trace-time tier counters (reset with ``reset_tier_counts``): each jit
+# trace that routes through qmm bumps its tier once, so tests and the
+# serve benchmark can assert which kernels a program actually compiled
+# against without instrumenting jaxprs.
+TIER_COUNTS = {"decode": 0, "prefill": 0, "grouped": 0}
+
+
+def reset_tier_counts() -> None:
+    for k in TIER_COUNTS:
+        TIER_COUNTS[k] = 0
+
+
+class PackedNodeError(TypeError):
+    """A params node does not have the packed layout qmm consumes."""
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class QuantizedLinear:
-    """Deployment weight format: packed codes + per-group scales."""
+    """Deployment weight format: packed codes + per-group scales.
 
-    packed: Array  # (K * bits/8, N) int8
-    scales: Array  # (K/G, N) f32
+    2-D (a single linear) or stacked 3-D (an expert group):
+
+      packed  (K * bits/8, N) int8        or (E, K * bits/8, N)
+      scales  (K/G, N) f32                or (E, K/G, N)
+    """
+
+    packed: Array
+    scales: Array
     bits: int
     k: int  # original reduction dim
 
@@ -44,50 +83,144 @@ def pack_weights(codes: Array, scales, bits: int) -> QuantizedLinear:
     return QuantizedLinear(pack_int(codes, bits), scales, bits, k)
 
 
-def from_node(node, k: int) -> QuantizedLinear:
+def from_node(node, k: int, path: str | None = None) -> QuantizedLinear:
     """View a packed params node (`repro.deploy` format) as a
     :class:`QuantizedLinear`. ``k`` is the original reduction dim;
-    container bits are inferred from the packed row count."""
+    container bits are inferred from the packed row count. 3-D nodes
+    (stacked experts) route to the grouped tier; ``path`` names the
+    offending node in errors."""
+    from ...deploy.pack import code_layout
+
     wp, scales = node["w"], node["qscale"]
-    assert wp.ndim == 2, f"qmm consumes 2-D packed weights, got {wp.shape}"
-    per = k // wp.shape[0]
-    return QuantizedLinear(wp, scales, 8 // per, k)
+    where = f" at {path!r}" if path else ""
+    if wp.ndim not in (2, 3):
+        raise PackedNodeError(
+            f"packed node{where}: codes must be 2-D (K*bits/8, N) or "
+            f"stacked 3-D (E, K*bits/8, N), got shape {wp.shape}")
+    if scales.ndim != wp.ndim:
+        raise PackedNodeError(
+            f"packed node{where}: qscale rank {scales.ndim} does not match "
+            f"codes rank {wp.ndim} (shapes {scales.shape} vs {wp.shape})")
+    try:
+        bits, _ = code_layout(wp, k)
+    except ValueError as e:
+        raise PackedNodeError(f"packed node{where}: {e}") from None
+    return QuantizedLinear(wp, scales, bits, k)
 
 
-def qmm(x: Array, qw: QuantizedLinear, *, backend: str = "auto") -> Array:
-    """Packed dequant-matmul: ``x @ dequant(qw)``.
+def select_tier(m: int, qw: QuantizedLinear) -> str:
+    """Execution tier for ``m`` activation rows against ``qw`` — the one
+    dispatch predicate, shared by :func:`qmm` and its tests."""
+    if qw.packed.ndim == 3:
+        return "grouped"
+    return "decode" if m <= DECODE_M_MAX else "prefill"
 
-    Args:
-      x: activations of shape (..., K), any float dtype; leading dims are
-        flattened to M rows for the kernel and restored on return.
-      qw: packed weight from :func:`pack_weights` — int8 container codes
-        (2/4/8-bit, ``K * bits/8`` rows) plus per-(group, out-channel)
-        f32 scales.
-      backend: ``'auto'`` (Pallas on TPU, XLA reference elsewhere),
-        ``'pallas'`` (interpret mode off-TPU), or ``'xla'``.
 
-    Returns:
-      f32 output of shape (..., N).
+def _pad_cols(qw: QuantizedLinear, bn: int) -> tuple[QuantizedLinear, int]:
+    """Zero-pad ragged N up to a multiple of ``bn`` (padded scales are
+    zero, so the extra columns cost nothing numerically and are sliced
+    off after the kernel)."""
+    n = qw.packed.shape[-1]
+    pad = (-n) % bn
+    if not pad:
+        return qw, n
+    widths = [(0, 0)] * (qw.packed.ndim - 1) + [(0, pad)]
+    return dataclasses.replace(
+        qw, packed=jnp.pad(qw.packed, widths),
+        scales=jnp.pad(qw.scales, widths)), n
 
-    Ragged M (not a multiple of the 8/128 sublane tile) is zero-padded up
-    to the tile multiple and the output sliced back, instead of degrading
-    to bm=1 — a grid of M single-row MXU calls.
-    """
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, qw.k)
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+
+def _qmm_2d(x2: Array, qw: QuantizedLinear, backend: str, tier: str) -> Array:
     if backend == "xla":
-        out = qmatmul_ref(x2, qw.packed, qw.scales, qw.bits)
+        ref = qgemv_ref if tier == "decode" else qmatmul_ref
+        return ref(x2, qw.packed, qw.scales, qw.bits)
+    interpret = jax.default_backend() != "tpu"
+    n = qw.packed.shape[-1]
+    bn = 128 if n >= 128 else n
+    qw, n = _pad_cols(qw, bn)
+    if tier == "decode":
+        out = qgemv(x2, qw.packed, qw.scales, bits=qw.bits, bn=bn,
+                    interpret=interpret)
     else:
-        interpret = jax.default_backend() != "tpu"
         m = x2.shape[0]
         bm = 128 if m % 128 == 0 else 8
         pad = (-m) % bm
         if pad:
             x2 = jnp.pad(x2, ((0, pad), (0, 0)))
-        out = qmatmul(x2, qw.packed, qw.scales, bits=qw.bits, bm=bm,
+        out = qmatmul(x2, qw.packed, qw.scales, bits=qw.bits, bm=bm, bn=bn,
                       interpret=interpret)
         if pad:
             out = out[:m]
-    return out.reshape(*lead, -1)
+    return out[:, :n] if out.shape[-1] != n else out
+
+
+def _qmm_grouped(x: Array, qw: QuantizedLinear, backend: str) -> Array:
+    """x (..., E, C, K) @ stacked qw (E, K*bits/8, N) -> (..., E, C, N)."""
+    if x.ndim < 3:
+        raise PackedNodeError(
+            f"grouped qmm: stacked codes {qw.packed.shape} need (..., E, C, "
+            f"K) activations, got rank-{x.ndim} {x.shape}")
+    e, c, k = x.shape[-3], x.shape[-2], x.shape[-1]
+    if e != qw.packed.shape[0] or k != qw.k:
+        raise PackedNodeError(
+            f"grouped qmm: activations (..., E={e}, C={c}, K={k}) do not "
+            f"match stacked codes {qw.packed.shape} (E, K*bits/8, N)")
+    lead = x.shape[:-3]
+    # (..., E, C, K) -> (E, B'*C, K): experts become the leading grid dim
+    xg = jnp.moveaxis(x.reshape(-1, e, c, k), 1, 0).reshape(e, -1, k)
+    if backend == "xla":
+        # decode rows: scan over E (one expert's (K, N) resident at a
+        # time); prefill rows: batched einsum (dequant transient is a
+        # good trade against serializing E contractions)
+        ref = (qmm_grouped_ref if xg.shape[1] <= DECODE_M_MAX
+               else qmm_grouped_dense_ref)
+        out = ref(xg, qw.packed, qw.scales, qw.bits)
+    else:
+        m = xg.shape[1]
+        bm = m if m <= DECODE_M_MAX else (128 if m % 128 == 0 else 8)
+        pad = (-m) % bm
+        if pad:
+            xg = jnp.pad(xg, ((0, 0), (0, pad), (0, 0)))
+        n = qw.packed.shape[-1]
+        bn = 128 if n >= 128 else n
+        qw, n = _pad_cols(qw, bn)
+        out = qmatmul_grouped(xg, qw.packed, qw.scales, bits=qw.bits, bm=bm,
+                              bn=bn, interpret=jax.default_backend() != "tpu")
+        out = out[:, :m, :n]
+    nn = out.shape[-1]
+    return jnp.moveaxis(out.reshape(e, -1, c, nn), 0, 1).reshape(*lead, e, c, nn)
+
+
+def qmm(x: Array, qw: QuantizedLinear, *, backend: str = "auto") -> Array:
+    """Packed dequant-matmul: ``x @ dequant(qw)``, tier picked by shape.
+
+    Args:
+      x: activations, any float dtype. For a 2-D ``qw``: shape (..., K);
+        leading dims are flattened to M rows for the kernel and restored
+        on return. For a stacked 3-D ``qw``: shape (..., E, C, K), with
+        the expert axis aligned to the codes' leading axis.
+      qw: packed weight from :func:`pack_weights` / :func:`from_node` —
+        int8 container codes (2/4/8-bit, ``K * bits/8`` rows) plus
+        per-(group, out-channel) f32 scales.
+      backend: ``'auto'`` (Pallas on TPU, XLA reference elsewhere),
+        ``'pallas'`` (interpret mode off-TPU), or ``'xla'``.
+
+    Returns:
+      f32 output of shape (..., N) / (..., E, C, N).
+
+    Tier selection (:func:`select_tier`): M <= ``DECODE_M_MAX`` rows run
+    the ``qgemv`` decode kernel at the true row count; larger M runs the
+    tiled prefill GEMM with ragged M zero-padded up to the 8/128 sublane
+    tile; 3-D stacked nodes run the grouped expert kernel. Ragged N is
+    zero-padded (zero scales) up to the lane tile and sliced back.
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if qw.packed.ndim == 3:
+        TIER_COUNTS["grouped"] += 1
+        return _qmm_grouped(x, qw, backend)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, qw.k)
+    tier = select_tier(x2.shape[0], qw)
+    TIER_COUNTS[tier] += 1
+    return _qmm_2d(x2, qw, backend, tier).reshape(*lead, -1)

@@ -1,4 +1,15 @@
-"""Pure-jnp oracle for the packed dequant-matmul kernel."""
+"""Pure-jnp oracles for the packed dequant-matmul kernels.
+
+``qmatmul_ref`` is the literal prefill oracle (dequantize, then dot).
+``qgemv_ref`` is the decode-shaped reference: for M = a few batch rows
+the dequant multiply dominates, so it contracts the *integer codes*
+first and applies the per-group scales to the (G, M, N) partial sums —
+KN scale-multiplies (and a scaled f32 weight copy) become G*N. It is
+also what the XLA backend serves decode steps from.
+``qmm_grouped_ref`` extends it over stacked experts with a scan so the
+residency stays one expert's (K, N) — the full f32 (E, K, N) dequant is
+never materialized.
+"""
 from __future__ import annotations
 
 import jax
@@ -23,3 +34,64 @@ def qmatmul_ref(x: Array, w_packed: Array, scales: Array, bits: int) -> Array:
     k = w_packed.shape[0] * per
     w = dequant(w_packed, scales, bits, k)
     return jnp.dot(x.astype(jnp.float32), w).astype(x.dtype)
+
+
+def qgemv_ref(x: Array, w_packed: Array, scales: Array, bits: int) -> Array:
+    """Decode-shaped (small-M) reference: scale after the code dot.
+
+    x: (M, K); w_packed: (K*bits/8, N) int8; scales: (G, N). Exact same
+    math as :func:`qmatmul_ref` (f32 accumulation, scales are uniform
+    within a group) reassociated as ``sum_g s[g] * (x_g @ codes_g)`` —
+    no (K, N) *scaled* f32 weight copy, and the per-element dequant
+    multiply shrinks from K*N to G*N per output tile.
+    """
+    per = 8 // bits
+    k = w_packed.shape[0] * per
+    m = x.shape[0]
+    g_rows = scales.shape[0]
+    codes = unpack_int(w_packed, bits, k).astype(jnp.float32)  # (K, N)
+    if g_rows == 1:  # per-channel: one plain dot, then an (M, N) scale
+        out = jnp.dot(x.astype(jnp.float32), codes) * scales
+    else:  # grouped: G batched (M, K/G) dots, scales on the partials
+        cg = codes.reshape(g_rows, k // g_rows, -1)
+        xg = x.astype(jnp.float32).reshape(m, g_rows, k // g_rows)
+        partial = jnp.einsum("mgk,gkn->gmn", xg, cg)
+        out = jnp.einsum("gmn,gn->mn", partial, scales.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def qmm_grouped_ref(x: Array, w_packed: Array, scales: Array, bits: int) -> Array:
+    """Stacked-expert decode reference: one expert resident at a time.
+
+    x: (E, M, K); w_packed: (E, K*bits/8, N) int8; scales: (E, G, N).
+    A ``lax.scan`` over E keeps the unpack transient at one (K, N) tile
+    (the decode residency contract the MoE trace test pins down);
+    per-expert math is :func:`qgemv_ref`'s scale-after-dot form.
+    """
+
+    def step(_, ews):
+        xe, we, se = ews
+        return None, qgemv_ref(xe, we, se, bits)
+
+    _, out = jax.lax.scan(step, None, (x, w_packed, scales))
+    return out
+
+
+def qmm_grouped_dense_ref(x: Array, w_packed: Array, scales: Array,
+                          bits: int) -> Array:
+    """Stacked-expert prefill reference: one batched einsum over E.
+
+    Same contract as :func:`qmm_grouped_ref`; at prefill arithmetic
+    intensity (many rows per expert) the (E, K, N) dequant transient is
+    a good trade against serializing E contractions, so the dispatcher
+    routes large per-expert row counts here and small (decode) ones to
+    the scan form.
+    """
+    per = 8 // bits
+    k = w_packed.shape[-2] * per
+    g_rows = scales.shape[-2]
+    codes = unpack_int(w_packed, bits, k, axis=-2).astype(jnp.float32)
+    cg = codes.reshape(*codes.shape[:-2], g_rows, k // g_rows, codes.shape[-1])
+    w = (cg * scales[..., :, None, :]).reshape(*codes.shape)
+    out = jnp.einsum("emk,ekn->emn", x.astype(jnp.float32), w)
+    return out.astype(x.dtype)

@@ -6,7 +6,9 @@ Serves a (small, host-runnable) model with continuous batched requests:
      which is saved and re-loaded so the served bytes are exactly what a
      deployment would ship),
   2. prefill the prompt batch, 3. decode N tokens with the jitted step,
-  4. report artifact bytes vs FP and tokens/s packed-vs-fp.
+  4. report artifact bytes vs FP, tokens/s packed-vs-fp (steady state —
+     compile is AOT'd out of the timed loops) and which qmm tiers fired
+     (decode steps dispatch to the ``qgemv`` fast path by shape).
 
 Packed weights stay int8 codes in HBM end-to-end: every linear resolves
 through the ``QuantHook.packed_matmul`` weight-provider (``qmm``), so the
@@ -17,6 +19,7 @@ driver runs the same model code end-to-end on the host.
 from __future__ import annotations
 
 import argparse
+import copy
 import tempfile
 import time
 
@@ -45,6 +48,10 @@ def parse_args(argv=None):
                    help="where --quant saves its artifact (default: tmpdir)")
     p.add_argument("--no-compare-fp", action="store_true",
                    help="skip the FP throughput reference pass")
+    p.add_argument("--packed-backend", default="auto",
+                   choices=["auto", "xla", "pallas"],
+                   help="qmm execution path for packed weights (tiers are "
+                        "still picked by shape)")
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args(argv)
 
@@ -70,40 +77,63 @@ def run_prefill_decode(model, params, batch, *, batch_size: int,
                        prompt_len: int, gen_len: int, hook=None, tag="fp",
                        quiet=False):
     """One prefill + ``gen_len`` greedy decode steps with the jitted
-    step; returns (gen tokens, {'t_prefill','t_decode','tok_s'}). The
-    single timing harness shared by this driver and
-    ``benchmarks/table6_deploy.py``."""
+    step; returns (gen tokens, stats). The single timing harness shared
+    by this driver and ``benchmarks/table6_deploy.py``.
+
+    Both programs are AOT-compiled (``lower().compile()``) before the
+    clock starts, so ``t_prefill``/``t_decode`` are steady-state serving
+    walls — compile time is reported separately as ``t_compile`` (it
+    used to land inside the decode loop and dominate short packed runs).
+    ``qmm_tiers`` records which packed execution tiers the two programs
+    traced (all zero for FP params).
+    """
+    from ..kernels.qmatmul import ops as qmm_ops
     from ..models.common import NO_QUANT
 
     hook = hook or NO_QUANT
     cache = model.init_cache(batch_size, prompt_len + gen_len, jnp.float32)
 
-    t0 = time.time()
     prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c, hook, remat="none"))
-    logits, cache = prefill(params, batch, cache)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-
     decode = jax.jit(
         lambda p, t, c, pos: model.decode_step(p, t, c, pos, hook),
         donate_argnums=(2,))
-    tok = jnp.argmax(logits, -1)[:, None]
+    tiers0 = dict(qmm_ops.TIER_COUNTS)
+    t0 = time.time()
+    prefill_c = prefill.lower(params, batch, cache).compile()
+    tok0 = jnp.zeros((batch_size, 1), jnp.int32)
+    pos0 = jnp.full((batch_size,), prompt_len, jnp.int32)
+    decode_c = decode.lower(params, tok0, cache, pos0).compile()
+    t_compile = time.time() - t0
+    tiers = {k: qmm_ops.TIER_COUNTS[k] - tiers0[k] for k in tiers0}
+
+    t0 = time.time()
+    logits, cache = prefill_c(params, batch, cache)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out_tokens = [tok]
     t0 = time.time()
     for i in range(gen_len - 1):
         pos = jnp.full((batch_size,), prompt_len + i, jnp.int32)
-        logits, cache = decode(params, tok, cache, pos)
-        tok = jnp.argmax(logits, -1)[:, None]
+        logits, cache = decode_c(params, tok, cache, pos)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
     toks = batch_size * (gen_len - 1)
     tok_s = toks / max(t_decode, 1e-9)
+    prefill_tok_s = batch_size * prompt_len / max(t_prefill, 1e-9)
     if not quiet:
-        print(f"[{tag}] prefill {batch_size}x{prompt_len} in {t_prefill:.2f}s; "
-              f"decode {toks} tokens in {t_decode:.2f}s ({tok_s:.1f} tok/s)")
+        used = ",".join(f"{k}={v}" for k, v in tiers.items() if v) or "none"
+        print(f"[{tag}] compile {t_compile:.2f}s; prefill {batch_size}x"
+              f"{prompt_len} in {t_prefill:.2f}s ({prefill_tok_s:.0f} tok/s); "
+              f"decode {toks} tokens in {t_decode:.2f}s ({tok_s:.1f} tok/s); "
+              f"qmm tiers: {used}")
     gen = jnp.concatenate(out_tokens, axis=1)
-    return gen, {"t_prefill": t_prefill, "t_decode": t_decode, "tok_s": tok_s}
+    return gen, {"t_prefill": t_prefill, "t_decode": t_decode,
+                 "t_compile": t_compile, "tok_s": tok_s,
+                 "prefill_tok_s": prefill_tok_s, "qmm_tiers": tiers}
 
 
 def _run_once(model, params, batch, args, hook=None, tag="fp"):
@@ -168,8 +198,12 @@ def _serve(args, cfg, model, params, artifact, fp_bytes):
           f"{art_bytes/1e6:.1f}MB packed ({art_bytes/fp_bytes:.3f}x)")
     assert art_bytes < fp_bytes, (art_bytes, fp_bytes)
 
+    hook = artifact.hook()
+    if args.packed_backend != "auto":
+        hook = copy.copy(hook)  # NO_QUANT is a shared singleton
+        hook.packed_backend = args.packed_backend
     gen, qstat = _run_once(model, artifact.params, batch, args,
-                           hook=artifact.hook(), tag="packed")
+                           hook=hook, tag="packed")
     if not args.no_compare_fp:
         _, fstat = _run_once(model, params, batch, args, tag="fp")
         print(f"packed vs fp: {qstat['tok_s']:.1f} vs {fstat['tok_s']:.1f} tok/s "

@@ -40,11 +40,17 @@ class QuantHook:
     codes (a ``qscale`` sibling — the `repro.deploy` artifact format),
     :func:`dense`/:func:`lm_head` hand the whole matmul to
     ``packed_matmul`` instead of materializing an f32 weight. The
-    default executes via the packed ``qmm`` kernel (weights stay int
+    default executes via the packed ``qmm`` dispatcher (weights stay int
     codes in HBM; dequant happens tile-wise in-register), after routing
     the activation through ``act`` so serve-time LSQ still applies.
+    ``qmm`` picks the execution tier by shape — decode gemv for M up to
+    a sublane of rows, the tiled prefill GEMM otherwise, and the grouped
+    expert kernel for stacked 3-D nodes (x is then (..., E, C, K)).
     ``packed_backend`` picks the qmm execution path ('auto': Pallas on
-    TPU, XLA reference elsewhere).
+    TPU, XLA reference elsewhere). Callers that already applied
+    activation fake-quant themselves (the MoE layer shares one
+    quantized activation across its gate/up matmuls) pass
+    ``apply_act=False``.
     """
 
     packed_backend: str = "auto"
@@ -55,16 +61,14 @@ class QuantHook:
     def act(self, name: str, x: Array) -> Array:
         return x
 
-    def packed_matmul(self, name: str, x: Array, node: Params) -> Array:
+    def packed_matmul(self, name: str, x: Array, node: Params,
+                      apply_act: bool = True) -> Array:
         from ..kernels.qmatmul.ops import from_node, qmm
 
-        x = self.act(name, x)
-        if node["w"].ndim > 2:  # stacked experts: dequant + grouped einsum
-            from ..deploy.pack import dequant_leaf
-
-            w = dequant_leaf(node["w"], node["qscale"], x.shape[-1])
-            return jnp.einsum("...i,...io->...o", x, w.astype(x.dtype))
-        return qmm(x, from_node(node, x.shape[-1]), backend=self.packed_backend)
+        if apply_act:
+            x = self.act(name, x)
+        return qmm(x, from_node(node, x.shape[-1], path=name),
+                   backend=self.packed_backend)
 
 
 NO_QUANT = QuantHook()

@@ -89,16 +89,22 @@ def _topk_gates(probs: Array, spec: MoESpec) -> tuple[Array, Array]:
     return gates, eids
 
 
-def _read_w(ctx: Ctx, p, name: str, k: int):
-    node = p[name]
-    if "qscale" in node:
-        from ..deploy.pack import dequant_leaf
+def _expert_mm(ctx: Ctx, p, name: str, xe: Array) -> Array:
+    """One stacked-expert contraction: (..., E, C, K) @ (E, K, N).
 
-        # stacked (E, K, N) expert weights: dequantize transiently (one
-        # layer's experts at a time inside the scan) + grouped einsum;
-        # the 2-D qmm path does not cover the expert-major contraction
-        return dequant_leaf(node["w"], node["qscale"], k)
-    return ctx.quant.weight(f"{ctx.scope}/{name}", node["w"])
+    Packed nodes run the grouped ``qmm`` tier — expert codes stay
+    resident int8 and dequantize per (expert, tile) inside the kernel,
+    instead of materializing a transient f32 (E, K, N) dequant per scan
+    step. Activation fake-quant is applied by :func:`_expert_ffn` (one
+    quantized activation shared across the gate/up matmuls), so the
+    weight-provider is told not to re-apply it.
+    """
+    node = p[name]
+    path = f"{ctx.scope}/{name}"
+    if "qscale" in node:
+        return ctx.quant.packed_matmul(path, xe, node, apply_act=False)
+    w = ctx.quant.weight(path, node["w"])
+    return jnp.einsum("...ecd,edf->...ecf", xe, w.astype(xe.dtype))
 
 
 def _expert_ffn(ctx: Ctx, p, xe: Array) -> Array:
@@ -108,18 +114,12 @@ def _expert_ffn(ctx: Ctx, p, xe: Array) -> Array:
     resolves the fsdp-axis on expert weights by gathering the (small)
     weight shards instead of resharding the (large) activations."""
     shard = ctx.extras.get("moe_shard") or (lambda t, kind: t)
-    d = xe.shape[-1]
-    wg = _read_w(ctx, p, "w_gate", d)
-    wu = _read_w(ctx, p, "w_up", d)
-    wd = _read_w(ctx, p, "w_down", wg.shape[-1])
-    eq_in = "...ecd,edf->...ecf"
-    eq_out = "...ecf,efd->...ecd"
     xe = ctx.quant.act(f"{ctx.scope}/w_gate", xe)
-    g = shard(jnp.einsum(eq_in, xe, wg.astype(xe.dtype)), "expert_major")
-    u = shard(jnp.einsum(eq_in, xe, wu.astype(xe.dtype)), "expert_major")
+    g = shard(_expert_mm(ctx, p, "w_gate", xe), "expert_major")
+    u = shard(_expert_mm(ctx, p, "w_up", xe), "expert_major")
     h = jax.nn.silu(g) * u
     h = ctx.quant.act(f"{ctx.scope}/w_down", h)
-    return shard(jnp.einsum(eq_out, h, wd.astype(xe.dtype)), "expert_major")
+    return shard(_expert_mm(ctx, p, "w_down", h), "expert_major")
 
 
 def apply(ctx: Ctx, p, spec: MoESpec, x: Array) -> Array:

@@ -10,9 +10,10 @@ from repro.kernels.fakequant.ref import fakequant_ref
 from repro.kernels.kvattn.kernel import kv_decode
 from repro.kernels.kvattn.ops import attend_int8, quantize_kv
 from repro.kernels.kvattn.ref import kv_decode_ref
-from repro.kernels.qmatmul.kernel import qmatmul
+from repro.kernels.qmatmul.kernel import qgemv, qmatmul, qmatmul_grouped
 from repro.kernels.qmatmul.ops import QuantizedLinear, pack_weights, qmm
-from repro.kernels.qmatmul.ref import qmatmul_ref
+from repro.kernels.qmatmul.ref import (qgemv_ref, qmatmul_ref,
+                                       qmm_grouped_dense_ref, qmm_grouped_ref)
 
 
 @pytest.mark.parametrize("bits", [8, 4, 2])
@@ -70,6 +71,112 @@ def test_qmm_ragged_m_pads_to_tile(rng, bits, M):
     assert out.shape == (M, N)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("M", [5, 130])
+@pytest.mark.parametrize("N", [150, 192])
+def test_qmm_ragged_n_pads_lanes(rng, bits, M, N):
+    """N not a multiple of the 128 lane tile (and not itself a valid bn)
+    zero-pads the packed columns + scales and slices the output back —
+    both decode (M=5) and prefill (M=130) tiers."""
+    K = 256
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    cfg = QConfig(bits=bits, channel_axis=-1)
+    st = init_qstate(w, cfg)
+    codes = quantize_int(w, st, cfg)
+    qw = pack_weights(codes, st.scale.reshape(-1, N), bits)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    out = qmm(x, qw, backend="pallas")
+    ref = qmatmul_ref(x, qw.packed, qw.scales, bits)
+    assert out.shape == (M, N)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# decode tier: qgemv
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+@pytest.mark.parametrize("M", [1, 2, 5])
+@pytest.mark.parametrize("group", [None, 64])
+def test_qgemv_vs_qmatmul_ref(rng, bits, M, group):
+    """Decode gemv (kernel + XLA ref) == the prefill oracle at small M."""
+    K, N = 256, 128
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    cfg = QConfig(bits=bits, channel_axis=-1, group_size=group)
+    st = init_qstate(w, cfg)
+    codes = quantize_int(w, st, cfg)
+    scales = st.scale.reshape(-1, N)
+    packed = pack_weights(codes, scales, bits).packed
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    ref = qmatmul_ref(x, packed, scales, bits)
+    out_ref = qgemv_ref(x, packed, scales, bits)
+    out_kern = qgemv(x, packed, scales, bits=bits, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_ref), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(out_kern), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# grouped tier: stacked expert nodes
+# ---------------------------------------------------------------------------
+
+
+def _stacked_node(rng, E, K, N, bits, group=None):
+    from repro.deploy import rtn_pack_leaf
+
+    w = jnp.asarray(rng.normal(size=(E, K, N)), jnp.float32)
+    wp, qs = rtn_pack_leaf(w, bits, group)
+    return {"w": wp, "qscale": qs}
+
+
+@pytest.mark.parametrize("bits,group", [(8, None), (4, 64), (2, None),
+                                        (3, None)])  # 3: int8-container case
+def test_qmm_grouped_vs_dequant_einsum(rng, bits, group):
+    """Grouped kernel + ref == transient dequant + grouped einsum (the
+    path they replaced), incl. a W3 code in an int8 container."""
+    from repro.deploy import dequant_leaf
+    from repro.kernels.qmatmul.ops import from_node
+
+    E, C, K, N = 3, 5, 128, 256
+    node = _stacked_node(rng, E, K, N, bits, group)
+    x = jnp.asarray(rng.normal(size=(E, C, K)), jnp.float32)
+    w = dequant_leaf(node["w"], node["qscale"], K)
+    ref = jnp.einsum("eck,ekn->ecn", x, w)
+
+    qw = from_node(node, K)
+    out_scan = qmm_grouped_ref(x, qw.packed, qw.scales, qw.bits)
+    out_dense = qmm_grouped_dense_ref(x, qw.packed, qw.scales, qw.bits)
+    out_kern = qmatmul_grouped(x, qw.packed, qw.scales, bits=qw.bits, bm=C,
+                               interpret=True)
+    out_qmm = qmm(x, qw, backend="xla")
+    for got in (out_scan, out_dense, out_kern, out_qmm):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("C", [3, 16])  # scan (decode) / dense (prefill) refs
+def test_qmm_grouped_batched_lead_dims(rng, C):
+    """(B, E, C, K) activations keep the expert axis aligned to the
+    stacked codes through the dispatcher (both backends)."""
+    B, E, K, N = 2, 4, 64, 128
+    node = _stacked_node(rng, E, K, N, 4)
+    from repro.deploy import dequant_leaf
+    from repro.kernels.qmatmul.ops import from_node
+
+    x = jnp.asarray(rng.normal(size=(B, E, C, K)), jnp.float32)
+    w = dequant_leaf(node["w"], node["qscale"], K)
+    ref = jnp.einsum("beck,ekn->becn", x, w)
+    qw = from_node(node, K)
+    for backend in ("xla", "pallas"):
+        out = qmm(x, qw, backend=backend)
+        assert out.shape == (B, E, C, N)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
 
 
 def test_qmm_wrapper_matches_dense(rng):
