@@ -99,11 +99,17 @@ def main() -> list[dict]:
     # .get(): disk-cached runs may predate the memory-plane stats
     peak_mb = res["stats"].get("calib_peak_bytes", 0) / 1e6
     fisher_s = res["stats"].get("fisher_wall_s", 0.0)
+    # robustness telemetry (.get(): cached runs may predate the guards)
+    retries = res["stats"].get("unit_retries", 0)
+    fallbacks = res["stats"].get("unit_fallbacks", 0)
+    stragglers = res["stats"].get("stragglers", 0)
     rows.append({"name": f"brecq_w{W_BITS}", "us_per_call": brecq_wall * 1e6,
                  "derived": (f"loss={ev['loss']:.4f};wall_s={brecq_wall:.0f};"
                              f"fisher_wall_s={fisher_s:.0f};"
                              f"peak_mb={peak_mb:.1f};"
-                             f"data_tokens={calib_tokens}")})
+                             f"data_tokens={calib_tokens};"
+                             f"retries={retries};fallbacks={fallbacks};"
+                             f"stragglers={stragglers}")})
 
     # production cost includes packing the deployment artifact
     from repro.core import PTQResult

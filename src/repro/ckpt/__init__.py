@@ -1,1 +1,1 @@
-from .checkpoint import CheckpointManager  # noqa: F401
+from .checkpoint import CheckpointManager, CheckpointReadError  # noqa: F401

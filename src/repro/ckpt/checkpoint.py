@@ -33,6 +33,41 @@ import numpy as np
 SEP = "/"
 
 
+class CheckpointReadError(RuntimeError):
+    """A checkpoint's array payload could not be read (truncated file,
+    corrupt zip, missing member). Carries the path that failed so callers
+    (e.g. `repro.deploy.QuantizedArtifact.load`) can raise their own
+    typed error naming the artifact."""
+
+    def __init__(self, path, cause: Exception, member: Optional[str] = None):
+        super().__init__(f"cannot read checkpoint arrays at {path}: "
+                         f"{type(cause).__name__}: {cause}")
+        self.path = str(path)
+        self.cause = cause
+        # flat tree path of the npz member that failed, when known (the
+        # zip layer's own CRC catches damage member-by-member)
+        self.member = member.removesuffix(".npy") if member else None
+
+
+def _load_npz(path: Path):
+    """np.load with truncation/corruption mapped to CheckpointReadError."""
+    try:
+        return np.load(path)
+    except Exception as e:  # BadZipFile, EOFError, OSError, ValueError...
+        raise CheckpointReadError(path, e) from e
+
+
+def _read_member_lax(z, name: str) -> np.ndarray:
+    """Re-read one npz member with the zip CRC check disabled — the
+    non-strict escape hatch for artifacts whose payload bytes are known
+    (or accepted) to be damaged."""
+    import io
+
+    f = z.zip.open(name)
+    f._expected_crc = None  # CPython zipfile: None disables the CRC check
+    return np.lib.format.read_array(io.BytesIO(f.read()), allow_pickle=False)
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -117,25 +152,41 @@ class CheckpointManager:
 
     def restore(self, step: int, like: Any, shardings=None) -> Any:
         d = self.dir / f"step_{step:08d}"
-        with np.load(d / "arrays.npz") as z:
-            flat = {k: z[k] for k in z.files}
+        flat = {}
+        with _load_npz(d / "arrays.npz") as z:
+            for k in z.files:
+                try:
+                    flat[k] = z[k]
+                except Exception as e:  # member truncated/corrupt mid-array
+                    raise CheckpointReadError(d / "arrays.npz", e,
+                                              member=k) from e
         return _unflatten_into(like, flat, shardings)
 
-    def restore_nested(self, step: int) -> dict:
+    def restore_nested(self, step: int, strict: bool = True) -> dict:
         """Structure-free restore: rebuild nested dicts from the flat
         '/'-joined keys. Only valid for pure-dict trees (params-shaped
         checkpoints, deployment artifacts) — list/tuple nodes flatten to
         integer keys and are not reconstructed. Dtypes (incl. int8
-        packed codes) round-trip exactly through the npz."""
+        packed codes) round-trip exactly through the npz.
+
+        ``strict=False`` retries a member that fails the zip layer's own
+        CRC with the check disabled (``QuantizedArtifact.load(...,
+        verify=False)``); a torn zip is still unreadable."""
         d = self.dir / f"step_{step:08d}"
         tree: dict = {}
-        with np.load(d / "arrays.npz") as z:
+        with _load_npz(d / "arrays.npz") as z:
             for key in z.files:
                 node = tree
                 parts = key.split(SEP)
                 for p in parts[:-1]:
                     node = node.setdefault(p, {})
-                arr = z[key]
+                try:
+                    arr = z[key]
+                except Exception as e:  # member truncated/corrupt mid-array
+                    if strict:
+                        raise CheckpointReadError(d / "arrays.npz", e,
+                                                  member=key) from e
+                    arr = _read_member_lax(z, key + ".npy")
                 if arr.dtype.kind == "V" and arr.dtype.itemsize == 2:
                     # npz stores ml_dtypes.bfloat16 as an anonymous
                     # 2-byte void; f16 round-trips natively, so V2 is bf16

@@ -238,7 +238,8 @@ def _build_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
         reg = sum(adaround.round_reg(v, beta) for v in opt_["v"].values())
         return jnp.mean(err) + rc.lam * enabled * reg / nelem
 
-    def one_step(carry, it, bparams, states, x_q, x_fp, z_fp, g2, batch, mem):
+    def one_step(carry, it, bparams, states, x_q, x_fp, z_fp, g2, batch, mem,
+                 lr_scale):
         opt_, ostate, key = carry
         key, k_idx, k_mix = jax.random.split(key, 3)
         idx = jax.random.choice(k_idx, N, shape=(bs,), replace=False)
@@ -253,8 +254,10 @@ def _build_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
         bsl = {k: v[idx] for k, v in batch.items()}
         msl = mem[idx] if mem is not None else None
         nelem = sum(v.size for v in opt_["v"].values())
-        lr_tree = {"v": {p: 1.0 for p in opt_["v"]},
-                   "s": {p: lr_ratio for p in opt_["s"]}}
+        # lr_scale is a *traced* scalar (guarded retries halve it without
+        # re-tracing or breaking the structural program cache)
+        lr_tree = {"v": {p: lr_scale for p in opt_["v"]},
+                   "s": {p: lr_ratio * lr_scale for p in opt_["s"]}}
         loss, grads = jax.value_and_grad(unit_loss)(
             opt_, qstates_of(states), bparams, xin, z_fp[idx], g2b, bsl, msl,
             it.astype(jnp.float32), nelem)
@@ -262,20 +265,20 @@ def _build_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
         return (opt_, ostate, key), loss
 
     def scan_program(bparams, states, opt_, ostate, key,
-                     x_q, x_fp, z_fp, g2, batch, mem):
+                     x_q, x_fp, z_fp, g2, batch, mem, lr_scale):
         _TRACE_LOG.append("unit_scan")
         carry, losses = jax.lax.scan(
             lambda c, it: one_step(c, it, bparams, states, x_q, x_fp, z_fp,
-                                   g2, batch, mem),
+                                   g2, batch, mem, lr_scale),
             (opt_, ostate, key), jnp.arange(rc.iters, dtype=jnp.int32))
         opt_, ostate, _ = carry
         return opt_, ostate, losses
 
     def step_program(bparams, states, opt_, ostate, key, it,
-                     x_q, x_fp, z_fp, g2, batch, mem):
+                     x_q, x_fp, z_fp, g2, batch, mem, lr_scale):
         _TRACE_LOG.append("unit_step")
         carry, loss = one_step((opt_, ostate, key), it, bparams, states,
-                               x_q, x_fp, z_fp, g2, batch, mem)
+                               x_q, x_fp, z_fp, g2, batch, mem, lr_scale)
         return (*carry, loss)
 
     def hard_program(bparams, states, opt_, x, batch, mem):
@@ -296,20 +299,24 @@ def _build_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
 
 
 def run_unit_loop(progs: UnitPrograms, rc, bparams, states, opt, ostate, key,
-                  x_q, x_fp, z_fp, g2, batch, mem):
+                  x_q, x_fp, z_fp, g2, batch, mem, lr_scale: float = 1.0):
     """Drive the optimization; returns (opt, losses ndarray) with O(1)
-    syncs in scan mode (one device fetch for the whole trajectory)."""
+    syncs in scan mode (one device fetch for the whole trajectory).
+    ``lr_scale`` multiplies both learning rates at runtime (guarded-retry
+    backoff) without invalidating the compiled program."""
+    lr_scale = jnp.asarray(lr_scale, jnp.float32)
     if rc.loop_impl == "python":
         # pre-optimization dispatch pattern: per-iteration host round trip
         losses = []
         for it in range(rc.iters):
             opt, ostate, key, l = progs.step(
                 bparams, states, opt, ostate, key,
-                jnp.asarray(it, jnp.int32), x_q, x_fp, z_fp, g2, batch, mem)
+                jnp.asarray(it, jnp.int32), x_q, x_fp, z_fp, g2, batch, mem,
+                lr_scale)
             losses.append(float(l))
         return opt, np.asarray(losses, np.float64)
     opt, ostate, losses = progs.scan(bparams, states, opt, ostate, key,
-                                     x_q, x_fp, z_fp, g2, batch, mem)
+                                     x_q, x_fp, z_fp, g2, batch, mem, lr_scale)
     return opt, np.asarray(losses)  # the single sync for the trajectory
 
 
@@ -462,27 +469,29 @@ def _build_layer_programs(qc, rc, bs: int, lead: int) -> LayerPrograms:
         return (jnp.mean((z - zb).astype(jnp.float32) ** 2)
                 + rc.lam * enabled * reg / opt_["v"].size)
 
-    def one_step(carry, it, W, st, xin, zt):
+    def one_step(carry, it, W, st, xin, zt, lr_scale):
         opt_, ostate, key = carry
         key, k_idx = jax.random.split(key)
         idx = jax.random.choice(k_idx, lead, shape=(bs,), replace=False)
-        lr_tree = {"v": 1.0, **({"s": lr_ratio} if "s" in opt_ else {})}
+        lr_tree = {"v": lr_scale,
+                   **({"s": lr_ratio * lr_scale} if "s" in opt_ else {})}
         loss, grads = jax.value_and_grad(layer_loss)(
             opt_, W, st, xin[idx], zt[idx], it.astype(jnp.float32))
         opt_, ostate = adam.update(acfg, grads, ostate, opt_, lr_tree)
         return (opt_, ostate, key), loss
 
-    def scan_program(W, st, opt_, ostate, key, xin, zt):
+    def scan_program(W, st, opt_, ostate, key, xin, zt, lr_scale):
         _TRACE_LOG.append("layer_scan")
         carry, losses = jax.lax.scan(
-            lambda c, it: one_step(c, it, W, st, xin, zt),
+            lambda c, it: one_step(c, it, W, st, xin, zt, lr_scale),
             (opt_, ostate, key), jnp.arange(rc.iters, dtype=jnp.int32))
         opt_, ostate, _ = carry
         return opt_, ostate, losses
 
-    def step_program(W, st, opt_, ostate, key, it, xin, zt):
+    def step_program(W, st, opt_, ostate, key, it, xin, zt, lr_scale):
         _TRACE_LOG.append("layer_step")
-        carry, loss = one_step((opt_, ostate, key), it, W, st, xin, zt)
+        carry, loss = one_step((opt_, ostate, key), it, W, st, xin, zt,
+                               lr_scale)
         return (*carry, loss)
 
     return LayerPrograms(
@@ -490,13 +499,16 @@ def _build_layer_programs(qc, rc, bs: int, lead: int) -> LayerPrograms:
         step=jax.jit(step_program, donate_argnums=_donate(2, 3)))
 
 
-def run_layer_loop(progs: LayerPrograms, rc, W, st, opt, ostate, key, xin, zt):
+def run_layer_loop(progs: LayerPrograms, rc, W, st, opt, ostate, key, xin, zt,
+                   lr_scale: float = 1.0):
+    lr_scale = jnp.asarray(lr_scale, jnp.float32)
     if rc.loop_impl == "python":
         losses = []
         for it in range(rc.iters):
             opt, ostate, key, l = progs.step(
-                W, st, opt, ostate, key, jnp.asarray(it, jnp.int32), xin, zt)
+                W, st, opt, ostate, key, jnp.asarray(it, jnp.int32), xin, zt,
+                lr_scale)
             losses.append(float(l))
         return opt, np.asarray(losses, np.float64)
-    opt, ostate, losses = progs.scan(W, st, opt, ostate, key, xin, zt)
+    opt, ostate, losses = progs.scan(W, st, opt, ostate, key, xin, zt, lr_scale)
     return opt, np.asarray(losses)

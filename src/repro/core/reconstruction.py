@@ -26,13 +26,16 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..launch.watchdog import GracefulShutdown, StepWatchdog
 from ..models.common import NO_QUANT, Ctx, QuantHook
 from ..optim import adam
 from . import adaround, calib_loop, lsq
 from .adaround import BetaSchedule
 from .fisher import FisherStream
 from .hooks import LayerCaptureHook, RTNHook
+from .journal import CalibJournal, CalibrationInterrupted
 from .quantizer import QConfig, QState, init_qstate, quantize_dequant
 
 # re-export for baselines.py (the hook moved to hooks.py so calib_loop's
@@ -208,6 +211,24 @@ class ReconConfig:
         of one extra backward pass per unit per calib batch; ``'full'``
         is the reference all-blocks-resident eps-trick capture
         (``nb x N x S x d`` f32).
+      unit_guard: per-unit health guard (block/stage/net units). After a
+        unit optimizes, its loss trajectory and reconstruction MSE are
+        checked against the unit's own RTN baseline (hard forward with
+        the *initial* rounding/scales — identical to round-to-nearest);
+        a non-finite trace or an MSE worse than ``rtn * mse_guard_ratio``
+        triggers a retry from the initial state at a reduced learning
+        rate, and after ``unit_retries`` failed retries the unit degrades
+        to its RTN baseline instead of failing the job. Device-OOM during
+        the optimization retries with a halved calibration minibatch.
+      unit_retries: bounded retries per unhealthy unit before RTN
+        fallback.
+      retry_lr_decay: learning-rate backoff factor per retry (applied to
+        both ``lr_v`` and ``lr_s`` as a runtime scalar — retries reuse
+        the compiled program).
+      mse_guard_ratio: tolerance of the MSE guard; a unit only counts as
+        unhealthy when its reconstruction MSE exceeds the RTN baseline
+        by this factor (optimization starts *at* RTN, so small
+        low-iteration wobble must not trip the guard).
     """
 
     w_bits: int = 4
@@ -231,6 +252,10 @@ class ReconConfig:
     loop_impl: str = "scan"  # 'scan' | 'python' (reference)
     stream_dtype: str = "bfloat16"  # 'bfloat16' | 'float32' (reference)
     fisher_mode: str = "stream"  # 'stream' | 'full' (reference)
+    unit_guard: bool = True  # NaN/MSE guard + retry/degrade per unit
+    unit_retries: int = 2  # retries before RTN fallback
+    retry_lr_decay: float = 0.5  # lr backoff per retry (runtime scalar)
+    mse_guard_ratio: float = 1.5  # unhealthy iff mse > rtn_mse * ratio
 
 
 @dataclasses.dataclass
@@ -329,7 +354,8 @@ def _nbytes(a: Optional[Array]) -> int:
     return 0 if a is None else a.size * a.dtype.itemsize
 
 
-def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQResult:
+def quantize(model, params, calib_batches: list[dict], rc: ReconConfig, *,
+             workdir: Optional[str] = None) -> PTQResult:
     """Run BRECQ calibration (paper Alg. 1) and return quantized params.
 
     Args:
@@ -340,6 +366,16 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
         images; here token/frame batches). They are concatenated into
         one calibration set of N sequences.
       rc: static :class:`ReconConfig`.
+      workdir: optional journal directory making the run resumable. A
+        snapshot (streams + accumulated v/s + per-unit stats) is written
+        atomically after every reconstructed unit; a re-run with the same
+        ``workdir`` skips completed units and continues bit-identically
+        to an uninterrupted run. While a journal is active, SIGTERM /
+        SIGINT finish the current unit, persist it, and raise
+        :class:`~repro.core.journal.CalibrationInterrupted` instead of
+        dying mid-unit (prior signal handlers are restored on exit). A
+        journal written by a different config/model/calib set raises
+        :class:`~repro.core.journal.CalibJournalError`.
 
     Returns:
       :class:`PTQResult` with:
@@ -363,9 +399,14 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
               'fisher': bytes}`` breakdown,
             - ``unit_cache`` (and ``layer_cache`` / ``probe_cache`` where
               applicable): compiled-program cache hits/misses,
+            - robustness: ``unit_retries`` / ``unit_fallbacks`` /
+              ``unit_oom_halvings`` aggregates from the per-unit guard,
+              ``stragglers`` from the per-unit wall-time watchdog, and
+              ``resumed_at_unit`` when a journal resume skipped units,
             - per unit (``stats['units']``): ``loss_trace``,
               ``final_recon_mse``, ``opt_wall_s``, ``calib_iters_per_s``,
-              ``cache_hit``.
+              ``cache_hit`` (guarded units add ``retries``, ``fallback``,
+              ``rtn_recon_mse``, ``oom_halvings``, ``calib_bs``).
     """
     if rc.loop_impl not in ("scan", "python"):
         raise ValueError(f"loop_impl must be 'scan' or 'python', got {rc.loop_impl!r}")
@@ -395,43 +436,85 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
         fisher = FisherStream(walker, params, calib_batches,
                               mode=rc.fisher_mode, dtype=sdtype)
 
-    # -- streams (stored in rc.stream_dtype; compute stays f32) ---------------
-    x_fp = jax.jit(lambda b: walker.stem(params, b)[0].astype(sdtype))(calib)
-    x_q = jax.jit(lambda b: walker.stem(params, b, q_stem_hook)[0].astype(sdtype))(calib)
-    mem_fp: Optional[Array] = None
-    mem_q: Optional[Array] = None
-
     units = _partition(walker, rc)
+
+    # -- resumable journal + preemption-safe shutdown (workdir mode) ----------
+    journal: Optional[CalibJournal] = None
+    shutdown: Optional[GracefulShutdown] = None
+    snap = None
+    if workdir is not None:
+        sig = {"rc": repr(rc), "arch": getattr(model.cfg, "name", None),
+               "n_units": len(units),
+               "calib": str(jax.tree.map(
+                   lambda a: (tuple(a.shape), str(a.dtype)), calib))}
+        journal = CalibJournal(workdir, sig)
+        snap = journal.load()
+        shutdown = GracefulShutdown()
+
+    start_unit = 0
     v_all: dict[str, Array] = {}
     s_all: dict[str, Array] = {}
-    stats = {"units": [], "granularity": rc.granularity}
+    stats: dict = {"units": [], "granularity": rc.granularity}
     stream_peak = 0
+    mem_fp: Optional[Array] = None
+    mem_q: Optional[Array] = None
+    if snap is not None:
+        # everything a restart cannot recompute comes from the journal;
+        # qstates/Fisher/unit keys were rebuilt deterministically above
+        start_unit = snap["next_unit"]
+        x_fp, x_q = snap["x_fp"], snap["x_q"]
+        mem_fp, mem_q = snap["mem_fp"], snap["mem_q"]
+        v_all, s_all = snap["v_all"], snap["s_all"]
+        stats["units"] = [_revive_unit_stat(u) for u in snap["unit_stats"]]
+        stream_peak = snap["stream_peak"]
+        stats["resumed_at_unit"] = start_unit
+    else:
+        # streams (stored in rc.stream_dtype; compute stays f32)
+        x_fp = jax.jit(lambda b: walker.stem(params, b)[0].astype(sdtype))(calib)
+        x_q = jax.jit(
+            lambda b: walker.stem(params, b, q_stem_hook)[0].astype(sdtype))(calib)
 
-    for ui, unit in enumerate(units):
-        unit_key = jax.random.fold_in(base_key, ui)
-        # while a unit runs, the old and new stream generations coexist
-        stream_peak = max(stream_peak, 2 * (_nbytes(x_fp) + _nbytes(x_q))
-                          + _nbytes(mem_fp) + _nbytes(mem_q))
-        if rc.granularity == "layer":
-            x_fp, x_q, v_u, s_u, ustat = _reconstruct_layerwise(
-                model, walker, params, weights, calib, unit[0], x_fp, x_q,
-                mem_fp, mem_q, qstates, rc, unit_key)
-        else:
-            x_fp, x_q, v_u, s_u, ustat = _reconstruct_unit(
-                model, walker, params, weights, calib, unit, x_fp, x_q,
-                mem_fp, mem_q, fisher, qstates, rc, unit_key)
-        v_all.update(v_u)
-        s_all.update(s_u)
-        stats["units"].append(ustat)
-        # enc->dec boundary transition between units (computed in f32,
-        # stored back in the stream dtype)
-        if walker.encdec and max(unit) == walker.enc_n - 1:
-            mem_fp, x_fp = walker.boundary_transition(
-                params, calib, x_fp.astype(jnp.float32))
-            mem_q, x_q = walker.boundary_transition(
-                params, calib, x_q.astype(jnp.float32), q_stem_hook)
-            mem_fp, x_fp = mem_fp.astype(sdtype), x_fp.astype(sdtype)
-            mem_q, x_q = mem_q.astype(sdtype), x_q.astype(sdtype)
+    wd = StepWatchdog(label="unit")
+    try:
+        for ui in range(start_unit, len(units)):
+            unit = units[ui]
+            unit_key = jax.random.fold_in(base_key, ui)
+            wd.start()
+            # while a unit runs, the old and new stream generations coexist
+            stream_peak = max(stream_peak, 2 * (_nbytes(x_fp) + _nbytes(x_q))
+                              + _nbytes(mem_fp) + _nbytes(mem_q))
+            if rc.granularity == "layer":
+                x_fp, x_q, v_u, s_u, ustat = _reconstruct_layerwise(
+                    model, walker, params, weights, calib, unit[0], x_fp, x_q,
+                    mem_fp, mem_q, qstates, rc, unit_key)
+            else:
+                x_fp, x_q, v_u, s_u, ustat = _reconstruct_unit(
+                    model, walker, params, weights, calib, unit, x_fp, x_q,
+                    mem_fp, mem_q, fisher, qstates, rc, unit_key)
+            v_all.update(v_u)
+            s_all.update(s_u)
+            stats["units"].append(ustat)
+            # enc->dec boundary transition between units (computed in f32,
+            # stored back in the stream dtype)
+            if walker.encdec and max(unit) == walker.enc_n - 1:
+                mem_fp, x_fp = walker.boundary_transition(
+                    params, calib, x_fp.astype(jnp.float32))
+                mem_q, x_q = walker.boundary_transition(
+                    params, calib, x_q.astype(jnp.float32), q_stem_hook)
+                mem_fp, x_fp = mem_fp.astype(sdtype), x_fp.astype(sdtype)
+                mem_q, x_q = mem_q.astype(sdtype), x_q.astype(sdtype)
+            wd.stop(ui)
+            if journal is not None:
+                # snapshot *after* the boundary transition so a resume
+                # starts exactly where this loop iteration left off
+                journal.save(ui + 1, x_fp, x_q, mem_fp, mem_q, v_all, s_all,
+                             stats["units"], stream_peak)
+                if shutdown.requested and ui + 1 < len(units):
+                    raise CalibrationInterrupted(journal.workdir, ui + 1,
+                                                 len(units))
+    finally:
+        if shutdown is not None:
+            shutdown.restore()
 
     params_q = bake(model, params, qstates, v_all, embed_head)
     cache1 = calib_loop.cache_stats()
@@ -449,7 +532,12 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
         unit_cache={"hits": cache1["unit_hits"] - cache0["unit_hits"],
                     "misses": cache1["unit_misses"] - cache0["unit_misses"]},
         probe_cache={"hits": cache1["probe_hits"] - cache0["probe_hits"],
-                     "misses": cache1["probe_misses"] - cache0["probe_misses"]})
+                     "misses": cache1["probe_misses"] - cache0["probe_misses"]},
+        stragglers=wd.stragglers,
+        unit_retries=sum(int(u.get("retries", 0)) for u in stats["units"]),
+        unit_fallbacks=sum(1 for u in stats["units"] if u.get("fallback")),
+        unit_oom_halvings=sum(int(u.get("oom_halvings", 0))
+                              for u in stats["units"]))
     if rc.granularity == "layer":
         stats["layer_cache"] = {
             "hits": cache1["layer_hits"] - cache0["layer_hits"],
@@ -467,6 +555,15 @@ def quantize(model, params, calib_batches: list[dict], rc: ReconConfig) -> PTQRe
                  bits_histogram=hist)
     return PTQResult(params_q=params_q, act_scales=s_all, qstates=all_states,
                      v=v_all, stats=stats)
+
+
+def _revive_unit_stat(u: dict) -> dict:
+    """Journal round-trip: loss traces are JSON lists on disk, ndarrays
+    in live stats."""
+    u = dict(u)
+    if isinstance(u.get("loss_trace"), list):
+        u["loss_trace"] = np.asarray(u["loss_trace"])
+    return u
 
 
 def _apply_unit(walker, params, unit, hook, x, batch, memory):
@@ -571,31 +668,104 @@ def _reconstruct_unit(model, walker, params, weights, calib, unit, x_fp, x_q,
             s0[cp] = lsq.init_act_scale(a, rc.a_bits, symmetric=True)
     opt = {"v": v0, "s": s0}
 
+    opt0 = opt  # initial logits/scales: the RTN start point, kept undonated
+
     misses0 = calib_loop.cache_stats()["unit_misses"]
     progs = calib_loop.get_unit_programs(
         model, walker, stackdefs, is_dec, cfgs, rc, bs, N,
-        bparams, states_c, opt, (x_q, x_fp, g2, calib, mem_q))
+        bparams, states_c, opt0, (x_q, x_fp, g2, calib, mem_q))
     cache_hit = calib_loop.cache_stats()["unit_misses"] == misses0
 
     z_fp = progs.fwd(bparams, x_fp, calib, mem_fp)
-    t_opt = time.time()
-    opt, losses = calib_loop.run_unit_loop(
-        progs, rc, bparams, states_c, opt, adam.init(opt), unit_key,
-        x_q, x_fp, z_fp, g2, calib, mem_q)
-    opt_wall = time.time() - t_opt
 
-    x_q2 = progs.hard(bparams, states_c, opt, x_q, calib, mem_q)
-    v_real = {p: opt["v"][c_of[p]] for p in wpaths}
-    s_real = {p: opt["s"][c] for p, c in act_of.items()}
+    def mse_vs_fp(x):
+        return float(jnp.mean((x - z_fp).astype(jnp.float32) ** 2))
+
+    rtn_mse = None
+    x_rtn = None
+    if rc.unit_guard:
+        # RTN baseline through the same hard program: hard_quant at the
+        # *initial* logits is exactly round-to-nearest, so one extra
+        # forward yields both the guard threshold and the degradation
+        # target (no re-trace — same compiled program).
+        x_rtn = progs.hard(bparams, states_c, opt0, x_q, calib, mem_q)
+        rtn_mse = mse_vs_fp(x_rtn)
+
+    opt_wall = 0.0
+    retries = 0
+    oom_halvings = 0
+    fallback = False
+    lr_scale = 1.0
+    opt = losses = x_q2 = mse = None
+    while True:
+        opt_try = jax.tree.map(jnp.copy, opt0)  # survives buffer donation
+        t_opt = time.time()
+        try:
+            opt_try, losses = calib_loop.run_unit_loop(
+                progs, rc, bparams, states_c, opt_try, adam.init(opt_try),
+                unit_key, x_q, x_fp, z_fp, g2, calib, mem_q,
+                lr_scale=lr_scale)
+        except jax.errors.JaxRuntimeError as e:
+            opt_wall += time.time() - t_opt
+            if (not rc.unit_guard or not _is_oom(e) or bs <= 1
+                    or oom_halvings >= 3):
+                raise
+            # device OOM: halve the calibration minibatch and recompile
+            oom_halvings += 1
+            bs = max(1, bs // 2)
+            progs = calib_loop.get_unit_programs(
+                model, walker, stackdefs, is_dec, cfgs, rc, bs, N,
+                bparams, states_c, opt0, (x_q, x_fp, g2, calib, mem_q))
+            continue
+        opt_wall += time.time() - t_opt
+        opt = opt_try
+        x_q2 = progs.hard(bparams, states_c, opt, x_q, calib, mem_q)
+        mse = mse_vs_fp(x_q2)
+        if not rc.unit_guard:
+            break
+        healthy = (bool(np.all(np.isfinite(losses))) and np.isfinite(mse)
+                   and mse <= rtn_mse * rc.mse_guard_ratio)
+        if healthy:
+            break
+        if retries >= rc.unit_retries:
+            fallback = True
+            break
+        retries += 1
+        lr_scale *= rc.retry_lr_decay  # runtime scalar: no re-trace
+
+    if fallback:
+        # degrade to the RTN baseline: omit this unit's logits so bake()
+        # rounds-to-nearest, keep the *initial* act scales (x_rtn was
+        # produced with exactly those)
+        x_q2, mse = x_rtn, rtn_mse
+        v_real = {}
+        s_real = {p: opt0["s"][c] for p, c in act_of.items()}
+    else:
+        v_real = {p: opt["v"][c_of[p]] for p in wpaths}
+        s_real = {p: opt["s"][c] for p, c in act_of.items()}
+
+    n_iters = rc.iters * (retries + 1)
     stat = {"unit": list(unit), "paths": len(wpaths), "iters": rc.iters,
             "loss_first": float(losses[0]), "loss_last": float(losses[-1]),
             "loss_trace": losses,
-            "final_recon_mse": float(jnp.mean((x_q2 - z_fp).astype(jnp.float32) ** 2)),
-            "opt_iters": rc.iters, "opt_wall_s": opt_wall,
-            "calib_iters_per_s": rc.iters / max(opt_wall, 1e-9),
+            "final_recon_mse": mse,
+            "opt_iters": n_iters, "opt_wall_s": opt_wall,
+            "calib_iters_per_s": n_iters / max(opt_wall, 1e-9),
             "cache_hit": cache_hit,
+            "retries": retries, "fallback": fallback,
+            "oom_halvings": oom_halvings, "calib_bs": bs,
             "wall_s": time.time() - t0}
+    if rtn_mse is not None:
+        stat["rtn_recon_mse"] = rtn_mse
     return z_fp, x_q2, v_real, s_real, stat
+
+
+def _is_oom(e: Exception) -> bool:
+    """Device allocation failures surface as JaxRuntimeError with a
+    RESOURCE_EXHAUSTED / out-of-memory message."""
+    msg = str(e).upper()
+    return ("RESOURCE_EXHAUSTED" in msg or "OUT OF MEMORY" in msg
+            or "OOM" in msg)
 
 
 def _m1(mem, idx=None):

@@ -7,8 +7,15 @@ Public API:
     fast path (``quantize_tree`` is the traceable tree transform).
   * :func:`dequant_leaf` / :func:`tree_bytes` — leaf helpers used by the
     models' packed-weight path and the launch layer.
+  * Integrity: :data:`ARTIFACT_SCHEMA_VERSION`, :func:`leaf_crc32` /
+    :func:`tree_checksums` / :func:`content_digest`, and the typed load
+    errors (:class:`ArtifactError` base; schema / corruption / mismatch).
 """
-from .artifact import QuantizedArtifact, export, rtn_artifact  # noqa: F401
-from .pack import (code_layout, container_bits, dequant_leaf,  # noqa: F401
-                   pack_codes, quantize_tree, rtn_bits_by_path, rtn_pack_leaf,
-                   tree_bytes)
+from .artifact import (ARTIFACT_SCHEMA_VERSION,  # noqa: F401
+                       ArtifactCorruptionError, ArtifactError,
+                       ArtifactMismatchError, ArtifactSchemaError,
+                       QuantizedArtifact, export, rtn_artifact)
+from .pack import (code_layout, container_bits, content_digest,  # noqa: F401
+                   dequant_leaf, leaf_crc32, pack_codes, quantize_tree,
+                   rtn_bits_by_path, rtn_pack_leaf, tree_bytes,
+                   tree_checksums)

@@ -36,15 +36,45 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from ..ckpt.checkpoint import CheckpointManager
+from ..ckpt.checkpoint import CheckpointManager, CheckpointReadError
 from ..core.quantizer import quantize_int
-from .pack import pack_codes, quantize_tree, rtn_bits_by_path, tree_bytes
+from .pack import (content_digest, pack_codes, quantize_tree,
+                   rtn_bits_by_path, tree_bytes, tree_checksums)
 
 Array = jax.Array
 Params = Any
 
 ARTIFACT_VERSION = 1
+# Manifest schema. v1 (implicit — manifests without the key) predates
+# integrity checking; v2 adds per-leaf crc32 checksums + content digest,
+# verified by default at load. Bump when the saved layout changes
+# incompatibly.
+ARTIFACT_SCHEMA_VERSION = 2
 _ESC = "%2F"  # act-scale paths contain '/', which is the ckpt tree separator
+
+
+class ArtifactError(RuntimeError):
+    """Base for deployment-artifact failures (load/verify/serve)."""
+
+
+class ArtifactSchemaError(ArtifactError):
+    """The artifact's manifest schema is missing, older, or newer than
+    this build understands."""
+
+
+class ArtifactCorruptionError(ArtifactError):
+    """The artifact's stored bytes do not match its manifest checksums
+    (bit flip, truncation, partial write). Names the offending leaf when
+    one can be identified."""
+
+    def __init__(self, message: str, leaf: Optional[str] = None):
+        super().__init__(message)
+        self.leaf = leaf
+
+
+class ArtifactMismatchError(ArtifactError):
+    """A structurally valid artifact does not match the model it is
+    being served with (arch/dims disagree, or packing did not shrink)."""
 
 
 @dataclasses.dataclass
@@ -78,28 +108,112 @@ class QuantizedArtifact:
     # -- persistence ----------------------------------------------------------
 
     def save(self, directory: str, step: int = 0) -> None:
-        """Atomic save through the checkpoint layer (npz + manifest)."""
+        """Atomic save through the checkpoint layer (npz + manifest).
+
+        The write goes to a temp step directory and is renamed into
+        place only after `manifest.json` exists, so a preempted save can
+        never be mistaken for a complete artifact. Before writing, the
+        manifest is stamped with ``schema_version``, per-leaf crc32
+        ``checksums`` and a ``content_digest`` — :meth:`load` verifies
+        all three by default."""
         mgr = CheckpointManager(directory, keep=1)
         tree = {"params": self.params,
                 "act_scales": {k.replace("/", _ESC): v
                                for k, v in self.act_scales.items()}}
+        checksums = tree_checksums(tree)
+        self.manifest["schema_version"] = ARTIFACT_SCHEMA_VERSION
+        self.manifest["checksums"] = checksums
+        self.manifest["content_digest"] = content_digest(checksums)
         mgr.save(step, tree, meta={"manifest": self.manifest,
                                    "stats": self.stats})
 
     @classmethod
-    def load(cls, directory: str, step: Optional[int] = None
-             ) -> "QuantizedArtifact":
+    def load(cls, directory: str, step: Optional[int] = None, *,
+             verify: bool = True) -> "QuantizedArtifact":
+        """Load a saved artifact, verifying integrity by default.
+
+        Verification (``verify=True``): the manifest schema version must
+        match this build, every stored leaf must hash to its manifest
+        crc32, and the leaf set itself must match the manifest's
+        ``content_digest``. Failures raise :class:`ArtifactSchemaError`
+        or :class:`ArtifactCorruptionError` (naming the offending leaf).
+        ``verify=False`` (serve's ``--no-verify``) skips all checks and
+        loads whatever bytes are on disk."""
         mgr = CheckpointManager(directory)
         step = mgr.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no artifact checkpoint in {directory}")
-        tree = mgr.restore_nested(step)
         meta = mgr.manifest(step)["meta"]
+        manifest = meta.get("manifest", {})
+        if verify:
+            _check_schema(manifest, directory)
+        try:
+            tree = mgr.restore_nested(step, strict=verify)
+        except CheckpointReadError as e:
+            if e.member is not None:
+                # the zip layer's member CRC caught the damage first —
+                # still name the leaf, like our own checksum pass would
+                raise ArtifactCorruptionError(
+                    f"artifact {directory} step {step}: leaf {e.member!r} "
+                    f"is truncated or bit-flipped on disk: {e}",
+                    leaf=e.member) from e
+            raise ArtifactCorruptionError(
+                f"artifact {directory} step {step} is unreadable "
+                f"(truncated or corrupt): {e}") from e
+        if verify:
+            _verify_checksums(tree, manifest, directory)
         acts = {k.replace(_ESC, "/"): v
                 for k, v in tree.get("act_scales", {}).items()}
         return cls(params=tree["params"], act_scales=acts,
-                   manifest=meta.get("manifest", {}),
-                   stats=meta.get("stats", {}))
+                   manifest=manifest, stats=meta.get("stats", {}))
+
+
+def _check_schema(manifest: dict, directory: str) -> None:
+    schema = manifest.get("schema_version")
+    if schema is None:
+        raise ArtifactSchemaError(
+            f"artifact {directory} has no manifest schema_version (pre-v2 "
+            f"artifact, saved without integrity checksums). Re-export and "
+            f"save it with this build to upgrade, or pass verify=False "
+            f"(serve: --no-verify) to load it unchecked.")
+    if schema != ARTIFACT_SCHEMA_VERSION:
+        raise ArtifactSchemaError(
+            f"artifact {directory} has manifest schema_version={schema} but "
+            f"this build reads schema_version={ARTIFACT_SCHEMA_VERSION}. "
+            f"Re-export the artifact with this build, or pass verify=False "
+            f"(serve: --no-verify) to load it unchecked.")
+
+
+def _verify_checksums(tree, manifest: dict, directory: str) -> None:
+    want: dict = manifest.get("checksums") or {}
+    if not want:
+        raise ArtifactSchemaError(
+            f"artifact {directory} declares schema_version="
+            f"{manifest.get('schema_version')} but carries no checksums — "
+            f"manifest is corrupt or hand-edited; pass verify=False to "
+            f"load it unchecked.")
+    got = tree_checksums(tree)
+    for key in sorted(want):
+        if key not in got:
+            raise ArtifactCorruptionError(
+                f"artifact {directory}: leaf {key!r} listed in the manifest "
+                f"is missing from arrays.npz", leaf=key)
+    for key in sorted(got):
+        if key not in want:
+            raise ArtifactCorruptionError(
+                f"artifact {directory}: stored leaf {key!r} is not listed "
+                f"in the manifest checksums", leaf=key)
+        if int(want[key]) != got[key]:
+            raise ArtifactCorruptionError(
+                f"artifact {directory}: checksum mismatch at leaf {key!r} "
+                f"(manifest crc32={int(want[key])}, stored bytes crc32="
+                f"{got[key]}) — the leaf was truncated or bit-flipped on "
+                f"disk", leaf=key)
+    digest = content_digest({k: int(v) for k, v in want.items()})
+    if manifest.get("content_digest") != digest:
+        raise ArtifactCorruptionError(
+            f"artifact {directory}: manifest content_digest does not match "
+            f"its own checksum table — the manifest was edited")
 
 
 # ---------------------------------------------------------------------------
@@ -182,6 +296,7 @@ def export(model, result, *, a_bits: Optional[int] = None) -> QuantizedArtifact:
     cfg = model.cfg
     manifest = {
         "version": ARTIFACT_VERSION,
+        "schema_version": ARTIFACT_SCHEMA_VERSION,
         "arch": cfg.name, "family": cfg.family,
         "n_layers": cfg.n_layers, "d_model": cfg.d_model, "vocab": cfg.vocab,
         "tie_embeddings": cfg.tie_embeddings,
@@ -220,6 +335,7 @@ def rtn_artifact(params: Params, bits: int, group: Optional[int] = None,
     jax.block_until_ready(jax.tree.leaves(packed))
     manifest = {
         "version": ARTIFACT_VERSION,
+        "schema_version": ARTIFACT_SCHEMA_VERSION,
         "arch": getattr(cfg, "name", None), "family": getattr(cfg, "family", None),
         "n_layers": getattr(cfg, "n_layers", None),
         "d_model": getattr(cfg, "d_model", None),

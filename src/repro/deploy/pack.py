@@ -25,10 +25,13 @@ build abstract serving params.
 """
 from __future__ import annotations
 
+import hashlib
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.quantizer import pack_int, unpack_int
 
@@ -173,6 +176,41 @@ def quantize_tree(params: Params, bits: int, group: Optional[int] = None
 def tree_bytes(tree) -> int:
     """Physical bytes of every array leaf (int8 counts 1 byte/value)."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# integrity: per-leaf checksums + content digest (artifact schema v2)
+# ---------------------------------------------------------------------------
+
+
+def leaf_crc32(arr) -> int:
+    """crc32 over a leaf's dtype/shape header + raw bytes.
+
+    The header is folded in so a leaf whose bytes happen to survive a
+    reshape or dtype reinterpretation still fails verification."""
+    a = np.ascontiguousarray(jax.device_get(arr))
+    crc = zlib.crc32(f"{a.dtype.str}{a.shape}".encode())
+    return zlib.crc32(a.tobytes(), crc) & 0xFFFFFFFF
+
+
+def tree_checksums(tree) -> dict[str, int]:
+    """Flat '/'-joined leaf path -> :func:`leaf_crc32`, in the same key
+    layout the checkpoint layer stores (so a verifying load can compare
+    against exactly what `arrays.npz` holds)."""
+    out: dict[str, int] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = leaf_crc32(leaf)
+    return out
+
+
+def content_digest(checksums: dict[str, int]) -> str:
+    """Order-independent digest of the whole artifact's leaf checksums."""
+    h = hashlib.sha256()
+    for key in sorted(checksums):
+        h.update(f"{key}:{checksums[key]}\n".encode())
+    return h.hexdigest()
 
 
 def rtn_bits_by_path(params: Params, bits: int) -> dict[str, int]:

@@ -20,6 +20,7 @@ compile. ``backend`` / ``QuantHook.packed_backend`` still forces a path.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +36,34 @@ Array = jax.Array
 # Decode steps are M = batch rows; beyond 8 rows the MXU-tiled prefill
 # GEMM wins anyway, so the gemv specialization stops paying.
 DECODE_M_MAX = 8
+
+# Decode-tier opt-out. On some backends the gemv specialization loses to
+# the tiled GEMM even at decode shapes (BENCH_serve.json records
+# decode_ratio_tier_vs_legacy < 1 on CPU); operators can force those
+# shapes onto the prefill tier without a rebuild:
+#   env   REPRO_QMM_DECODE_TIER=0|false|off   (read at import)
+#   code  set_decode_tier(False)              (overrides the env)
+_FALSY = ("0", "false", "off", "no")
+_DECODE_TIER_FORCED: bool | None = None  # set_decode_tier override
+
+
+def _env_decode_tier() -> bool:
+    return os.environ.get("REPRO_QMM_DECODE_TIER", "1").lower() not in _FALSY
+
+
+def decode_tier_enabled() -> bool:
+    """Whether decode-shaped matmuls may use the gemv tier."""
+    if _DECODE_TIER_FORCED is not None:
+        return _DECODE_TIER_FORCED
+    return _env_decode_tier()
+
+
+def set_decode_tier(enabled: bool | None) -> None:
+    """Force the decode tier on/off (``None`` returns control to the
+    ``REPRO_QMM_DECODE_TIER`` env var). Takes effect at the next trace —
+    already-compiled programs keep the tier they were traced with."""
+    global _DECODE_TIER_FORCED
+    _DECODE_TIER_FORCED = enabled
 
 # Trace-time tier counters (reset with ``reset_tier_counts``): each jit
 # trace that routes through qmm bumps its tier once, so tests and the
@@ -110,10 +139,14 @@ def from_node(node, k: int, path: str | None = None) -> QuantizedLinear:
 
 def select_tier(m: int, qw: QuantizedLinear) -> str:
     """Execution tier for ``m`` activation rows against ``qw`` — the one
-    dispatch predicate, shared by :func:`qmm` and its tests."""
+    dispatch predicate, shared by :func:`qmm` and its tests. Honors the
+    decode-tier opt-out (:func:`set_decode_tier` /
+    ``REPRO_QMM_DECODE_TIER``)."""
     if qw.packed.ndim == 3:
         return "grouped"
-    return "decode" if m <= DECODE_M_MAX else "prefill"
+    if m <= DECODE_M_MAX and decode_tier_enabled():
+        return "decode"
+    return "prefill"
 
 
 def _pad_cols(qw: QuantizedLinear, bn: int) -> tuple[QuantizedLinear, int]:

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..data import Corpus, CorpusConfig
-from ..deploy import QuantizedArtifact, rtn_artifact, tree_bytes
+from ..deploy import (ArtifactMismatchError, QuantizedArtifact, rtn_artifact,
+                      tree_bytes)
 from ..models import get_model
 
 
@@ -52,6 +53,9 @@ def parse_args(argv=None):
                    choices=["auto", "xla", "pallas"],
                    help="qmm execution path for packed weights (tiers are "
                         "still picked by shape)")
+    p.add_argument("--no-verify", action="store_true",
+                   help="skip artifact schema/checksum verification at load "
+                        "(escape hatch for pre-v2 or known-good artifacts)")
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args(argv)
 
@@ -64,7 +68,7 @@ def _check_manifest(manifest: dict, cfg) -> None:
                        ("d_model", cfg.d_model), ("vocab", cfg.vocab)):
         want = manifest.get(field)
         if want is not None and want != got:
-            raise ValueError(
+            raise ArtifactMismatchError(
                 f"artifact was exported for {field}={want!r} but the served "
                 f"model has {field}={got!r} — pass the matching --arch/"
                 f"--reduced flags (manifest: arch={manifest.get('arch')!r}, "
@@ -126,14 +130,16 @@ def run_prefill_decode(model, params, batch, *, batch_size: int,
     prefill_tok_s = batch_size * prompt_len / max(t_prefill, 1e-9)
     if not quiet:
         used = ",".join(f"{k}={v}" for k, v in tiers.items() if v) or "none"
+        note = "" if qmm_ops.decode_tier_enabled() else " (decode tier off)"
         print(f"[{tag}] compile {t_compile:.2f}s; prefill {batch_size}x"
               f"{prompt_len} in {t_prefill:.2f}s ({prefill_tok_s:.0f} tok/s); "
               f"decode {toks} tokens in {t_decode:.2f}s ({tok_s:.1f} tok/s); "
-              f"qmm tiers: {used}")
+              f"qmm tiers: {used}{note}")
     gen = jnp.concatenate(out_tokens, axis=1)
     return gen, {"t_prefill": t_prefill, "t_decode": t_decode,
                  "t_compile": t_compile, "tok_s": tok_s,
-                 "prefill_tok_s": prefill_tok_s, "qmm_tiers": tiers}
+                 "prefill_tok_s": prefill_tok_s, "qmm_tiers": tiers,
+                 "decode_tier_enabled": qmm_ops.decode_tier_enabled()}
 
 
 def _run_once(model, params, batch, args, hook=None, tag="fp"):
@@ -151,24 +157,28 @@ def main(argv=None, params=None):
 
     artifact = None
     tmp_dir = None  # cleaned on exit when the user didn't ask to keep it
-    if args.artifact:
-        artifact = QuantizedArtifact.load(args.artifact)
-        _check_manifest(artifact.manifest, cfg)
-        print(f"loaded artifact {args.artifact}: "
-              f"{artifact.nbytes()/1e6:.1f}MB, manifest arch="
-              f"{artifact.manifest.get('arch')}")
-    elif args.quant is not None:
-        art = rtn_artifact(params, args.quant, args.group, cfg=cfg)
-        if args.save_artifact:
-            out_dir = args.save_artifact
-        else:
-            tmp_dir = tempfile.TemporaryDirectory(prefix="brecq_art_")
-            out_dir = tmp_dir.name
-        art.save(out_dir)
-        artifact = QuantizedArtifact.load(out_dir)  # serve what was shipped
-        print(f"packed W{args.quant} artifact in "
-              f"{art.stats['pack_wall_s']:.2f}s -> {out_dir}")
     try:
+        if args.artifact:
+            # verifying load: schema + per-leaf checksums, unless --no-verify
+            artifact = QuantizedArtifact.load(args.artifact,
+                                              verify=not args.no_verify)
+            _check_manifest(artifact.manifest, cfg)
+            print(f"loaded artifact {args.artifact}: "
+                  f"{artifact.nbytes()/1e6:.1f}MB, manifest arch="
+                  f"{artifact.manifest.get('arch')}")
+        elif args.quant is not None:
+            art = rtn_artifact(params, args.quant, args.group, cfg=cfg)
+            if args.save_artifact:
+                out_dir = args.save_artifact
+            else:
+                tmp_dir = tempfile.TemporaryDirectory(prefix="brecq_art_")
+                out_dir = tmp_dir.name
+            art.save(out_dir)
+            # serve what was shipped, through the same verifying loader
+            artifact = QuantizedArtifact.load(out_dir,
+                                              verify=not args.no_verify)
+            print(f"packed W{args.quant} artifact in "
+                  f"{art.stats['pack_wall_s']:.2f}s -> {out_dir}")
         return _serve(args, cfg, model, params, artifact, fp_bytes)
     finally:
         if tmp_dir is not None:
@@ -196,7 +206,11 @@ def _serve(args, cfg, model, params, artifact, fp_bytes):
     art_bytes = artifact.nbytes()
     print(f"weights resident as packed int codes: {fp_bytes/1e6:.1f}MB fp32 -> "
           f"{art_bytes/1e6:.1f}MB packed ({art_bytes/fp_bytes:.3f}x)")
-    assert art_bytes < fp_bytes, (art_bytes, fp_bytes)
+    if art_bytes >= fp_bytes:
+        raise ArtifactMismatchError(
+            f"packed artifact ({art_bytes} bytes) is not smaller than the FP "
+            f"model ({fp_bytes} bytes) — the artifact does not belong to "
+            f"this model or holds unpacked weights")
 
     hook = artifact.hook()
     if args.packed_backend != "auto":

@@ -15,11 +15,13 @@ from typing import Callable, Optional
 
 class StepWatchdog:
     def __init__(self, z_threshold: float = 4.0, alpha: float = 0.05,
-                 warmup: int = 5, log: Callable[[str], None] = print):
+                 warmup: int = 5, log: Callable[[str], None] = print,
+                 label: str = "step"):
         self.z = z_threshold
         self.alpha = alpha
         self.warmup = warmup
         self.log = log
+        self.label = label
         self.mean: Optional[float] = None
         self.var: float = 0.0
         self.n = 0
@@ -39,7 +41,7 @@ class StepWatchdog:
                 sd = math.sqrt(self.var) if self.var > 0 else self.mean * 0.1
                 if dt > self.mean + self.z * sd:
                     self.stragglers += 1
-                    self.log(f"[watchdog] step {step}: {dt:.2f}s "
+                    self.log(f"[watchdog] {self.label} {step}: {dt:.2f}s "
                              f"(mean {self.mean:.2f}s +{self.z} sigma) — straggler")
             delta = dt - self.mean
             self.mean += self.alpha * delta
@@ -48,15 +50,42 @@ class StepWatchdog:
 
 
 class GracefulShutdown:
-    """SIGTERM/SIGINT -> finish the current step, checkpoint, exit."""
+    """SIGTERM/SIGINT -> finish the current step/unit, checkpoint, exit.
 
-    def __init__(self):
+    Consumed by launch/train.py (per training step) and by
+    ``repro.core.quantize(workdir=...)`` (per reconstruction unit).
+    Library callers that install the handlers temporarily must call
+    :meth:`restore` (or use the instance as a context manager) so the
+    process's previous SIGINT/SIGTERM behaviour comes back after the
+    guarded section."""
+
+    def __init__(self, install: bool = True):
         self.requested = False
+        self._prev: dict[int, object] = {}
+        if install:
+            self.install()
+
+    def install(self):
         for sig in (signal.SIGTERM, signal.SIGINT):
             try:
-                signal.signal(sig, self._handler)
+                self._prev[sig] = signal.signal(sig, self._handler)
             except ValueError:
                 pass  # non-main thread (tests)
+
+    def restore(self):
+        for sig, prev in self._prev.items():
+            try:
+                signal.signal(sig, prev)
+            except ValueError:
+                pass
+        self._prev = {}
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.restore()
+        return False
 
     def _handler(self, signum, frame):
         self.requested = True

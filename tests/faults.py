@@ -1,0 +1,323 @@
+"""Fault-injection harness for the robustness layer.
+
+Three families of faults, used by ``test_faults.py`` and by the CI
+``fault-smoke`` job (this file doubles as a CLI):
+
+  * **process faults** — deliver a real SIGTERM/SIGINT to this process
+    after a chosen reconstruction unit completes
+    (:func:`kill_during_unit`), exercising the actual signal handler +
+    journal path rather than a mocked one;
+  * **loop faults** — corrupt selected ``run_unit_loop`` invocations
+    with non-finite results (:func:`nan_unit_loop`) or a synthetic
+    device-OOM (:func:`oom_unit_loop`), exercising the per-unit guard's
+    retry / RTN-fallback / minibatch-halving paths;
+  * **storage faults** — genuinely damage a saved artifact on disk:
+    flip one bit inside a chosen leaf's bytes (:func:`flip_leaf_bit` —
+    ``np.savez`` stores uncompressed, so the payload offset is exact),
+    truncate ``arrays.npz`` (:func:`truncate_arrays`), or edit the
+    manifest (:func:`edit_manifest`).
+
+CLI (used by CI):
+
+  PYTHONPATH=src python tests/faults.py kill-resume
+  PYTHONPATH=src python tests/faults.py corruption
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import signal
+import struct
+import zipfile
+from pathlib import Path
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# process faults
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def kill_during_unit(unit_call: int, sig: int = signal.SIGTERM):
+    """Deliver ``sig`` to this process while reconstruction unit number
+    ``unit_call`` (0-based count of ``run_unit_loop`` invocations) is
+    finishing. The handler installed by ``quantize(workdir=...)`` turns
+    this into a checkpoint-at-unit-boundary + CalibrationInterrupted."""
+    from repro.core import calib_loop
+
+    orig = calib_loop.run_unit_loop
+    calls = {"n": 0}
+
+    def patched(*a, **k):
+        out = orig(*a, **k)
+        if calls["n"] == unit_call:
+            os.kill(os.getpid(), sig)
+        calls["n"] += 1
+        return out
+
+    calib_loop.run_unit_loop = patched
+    try:
+        yield calls
+    finally:
+        calib_loop.run_unit_loop = orig
+
+
+# ---------------------------------------------------------------------------
+# loop faults
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def nan_unit_loop(bad_calls: set[int]):
+    """Replace the result of selected ``run_unit_loop`` invocations with
+    non-finite logits and losses (call index counts every invocation,
+    including guard retries — injecting ``{0}`` fails only the first
+    attempt, so the first retry recovers)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import calib_loop
+
+    orig = calib_loop.run_unit_loop
+    calls = {"n": 0}
+
+    def patched(*a, **k):
+        i = calls["n"]
+        calls["n"] += 1
+        opt, losses = orig(*a, **k)
+        if i in bad_calls:
+            opt = jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), opt)
+            losses = np.full_like(np.asarray(losses, np.float64), np.nan)
+        return opt, losses
+
+    calib_loop.run_unit_loop = patched
+    try:
+        yield calls
+    finally:
+        calib_loop.run_unit_loop = orig
+
+
+@contextlib.contextmanager
+def oom_unit_loop(bad_calls: set[int]):
+    """Raise a synthetic device-OOM (``jax.errors.JaxRuntimeError`` with
+    a RESOURCE_EXHAUSTED message, the type/format XLA allocation
+    failures surface as) on selected ``run_unit_loop`` invocations."""
+    import jax
+
+    from repro.core import calib_loop
+
+    orig = calib_loop.run_unit_loop
+    calls = {"n": 0}
+
+    def patched(*a, **k):
+        i = calls["n"]
+        calls["n"] += 1
+        if i in bad_calls:
+            raise jax.errors.JaxRuntimeError(
+                "RESOURCE_EXHAUSTED: synthetic out-of-memory injected by "
+                "tests/faults.py (Out of memory while trying to allocate)")
+        return orig(*a, **k)
+
+    calib_loop.run_unit_loop = patched
+    try:
+        yield calls
+    finally:
+        calib_loop.run_unit_loop = orig
+
+
+# ---------------------------------------------------------------------------
+# storage faults
+# ---------------------------------------------------------------------------
+
+
+def latest_step_dir(directory) -> Path:
+    steps = sorted(p for p in Path(directory).glob("step_*") if p.is_dir())
+    if not steps:
+        raise FileNotFoundError(f"no step_* checkpoint under {directory}")
+    return steps[-1]
+
+
+def arrays_npz(directory) -> Path:
+    return latest_step_dir(directory) / "arrays.npz"
+
+
+def _payload_offsets(npz_path: Path) -> dict[str, tuple[int, int]]:
+    """member name -> (absolute offset of the raw .npy payload, size).
+
+    Valid because ``np.savez`` writes ZIP_STORED (no compression): the
+    payload bytes sit directly after the local file header."""
+    out = {}
+    with zipfile.ZipFile(npz_path) as z:
+        infos = z.infolist()
+    with open(npz_path, "rb") as f:
+        for info in infos:
+            assert info.compress_type == zipfile.ZIP_STORED, info.filename
+            f.seek(info.header_offset)
+            hdr = f.read(30)  # local file header is 30 bytes fixed
+            name_len, extra_len = struct.unpack("<HH", hdr[26:30])
+            out[info.filename] = (
+                info.header_offset + 30 + name_len + extra_len,
+                info.file_size)
+    return out
+
+
+def _npy_data_offset(f, member_off: int) -> int:
+    """Offset of the array *data* inside a .npy payload (skip the magic,
+    version and header-dict so a flipped bit lands in array bytes, not
+    in the parseable header)."""
+    f.seek(member_off)
+    magic = f.read(8)
+    assert magic[:6] == b"\x93NUMPY", magic
+    major = magic[6]
+    if major == 1:
+        (hlen,) = struct.unpack("<H", f.read(2))
+        return member_off + 10 + hlen
+    (hlen,) = struct.unpack("<I", f.read(4))
+    return member_off + 12 + hlen
+
+
+def flip_leaf_bit(directory, leaf: str, byte_index: int = 0,
+                  bit: int = 0) -> None:
+    """Flip one bit inside leaf ``leaf``'s stored array bytes in the
+    latest checkpoint under ``directory`` (leaf names are the flat
+    '/'-joined tree paths, e.g. ``params/body/0/attn/wq/w``)."""
+    npz = arrays_npz(directory)
+    offsets = _payload_offsets(npz)
+    member = leaf + ".npy"
+    if member not in offsets:
+        raise KeyError(f"{leaf!r} not in {sorted(offsets)}")
+    member_off, _size = offsets[member]
+    with open(npz, "r+b") as f:
+        data_off = _npy_data_offset(f, member_off)
+        f.seek(data_off + byte_index)
+        b = f.read(1)[0]
+        f.seek(data_off + byte_index)
+        f.write(bytes([b ^ (1 << bit)]))
+
+
+def truncate_arrays(directory, drop_bytes: int = 4096) -> None:
+    """Chop the tail off ``arrays.npz`` (simulates a partial copy /
+    filled disk — the zip central directory is destroyed)."""
+    npz = arrays_npz(directory)
+    size = npz.stat().st_size
+    with open(npz, "r+b") as f:
+        f.truncate(max(0, size - drop_bytes))
+
+
+def edit_manifest(directory, fn) -> None:
+    """Load the latest checkpoint's ``manifest.json``, apply ``fn(meta)``
+    (mutating the ``meta`` dict in place), write it back."""
+    path = latest_step_dir(directory) / "manifest.json"
+    doc = json.loads(path.read_text())
+    fn(doc["meta"])
+    path.write_text(json.dumps(doc))
+
+
+# ---------------------------------------------------------------------------
+# CLI for the CI fault-smoke job
+# ---------------------------------------------------------------------------
+
+
+def _tiny_setup(n_layers: int = 2):
+    import dataclasses
+
+    import jax
+
+    from repro.data import Corpus, CorpusConfig, make_batches
+    from repro.models import build_model, get_config
+
+    cfg = dataclasses.replace(get_config("brecq_lm_100m", reduced=True),
+                              n_layers=n_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
+    calib = make_batches(corpus, 2, 4, 32, seed=1, start_step=1000)
+    return cfg, model, params, calib
+
+
+def _cli_kill_resume() -> None:
+    """SIGTERM a journaled quantize mid-run, resume, assert bit-exact
+    against an uninterrupted run."""
+    import tempfile
+
+    import jax
+
+    from repro.core import CalibrationInterrupted, ReconConfig, quantize
+
+    cfg, model, params, calib = _tiny_setup()
+    rc = ReconConfig(w_bits=4, iters=6, calib_bs=4)
+    ref = quantize(model, params, calib, rc)
+
+    with tempfile.TemporaryDirectory() as d:
+        interrupted = False
+        with kill_during_unit(0):
+            try:
+                quantize(model, params, calib, rc, workdir=d)
+            except CalibrationInterrupted as e:
+                interrupted = True
+                print(f"interrupted as designed: {e}")
+        assert interrupted, "SIGTERM did not interrupt the journaled run"
+        res = quantize(model, params, calib, rc, workdir=d)
+        assert res.stats.get("resumed_at_unit") == 1, res.stats.get(
+            "resumed_at_unit")
+
+    ref_leaves = jax.tree_util.tree_flatten_with_path(ref.params_q)[0]
+    res_leaves = jax.tree_util.tree_flatten_with_path(res.params_q)[0]
+    for (pa, a), (_pb, b) in zip(ref_leaves, res_leaves):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), pa
+    assert set(ref.v) == set(res.v)
+    for p in ref.v:
+        assert np.array_equal(np.asarray(ref.v[p]), np.asarray(res.v[p])), p
+    print("kill-resume: resumed run is bit-exact "
+          f"({len(res.stats['units'])} units, resumed at unit 1)")
+
+
+def _cli_corruption() -> None:
+    """Flip one bit in a saved artifact and assert the verifying load
+    detects it and names the damaged leaf."""
+    import tempfile
+
+    from repro.deploy import (ArtifactCorruptionError, QuantizedArtifact,
+                              rtn_artifact)
+
+    cfg, model, params, _ = _tiny_setup()
+    art = rtn_artifact(params, 4, cfg=cfg)
+    with tempfile.TemporaryDirectory() as d:
+        art.save(d)
+        QuantizedArtifact.load(d)  # pristine artifact verifies
+        leaf = next(k for k in art.manifest["checksums"]
+                    if k.endswith("/w") or k.endswith("/table"))
+        flip_leaf_bit(d, leaf)
+        try:
+            QuantizedArtifact.load(d)
+        except ArtifactCorruptionError as e:
+            assert e.leaf == leaf, (e.leaf, leaf)
+            print(f"corruption: bit flip detected at leaf {e.leaf!r}")
+        else:
+            raise AssertionError("bit flip went undetected")
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("command", choices=["kill-resume", "corruption"])
+    args = p.parse_args(argv)
+    if args.command == "kill-resume":
+        _cli_kill_resume()
+    else:
+        _cli_corruption()
+
+
+if __name__ == "__main__":
+    import sys
+
+    SRC = str(Path(__file__).resolve().parents[1] / "src")
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    main()

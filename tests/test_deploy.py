@@ -294,7 +294,8 @@ def test_serve_rejects_mismatched_artifact(tmp_path):
     cfg, model = get_model("tinyllama_1_1b", reduced=True)
     params = model.init(jax.random.PRNGKey(0))
     rtn_artifact(params, 4, cfg=cfg).save(str(tmp_path / "art"))
-    with pytest.raises(ValueError, match="exported for"):
+    from repro.deploy import ArtifactMismatchError
+    with pytest.raises(ArtifactMismatchError, match="exported for"):
         serve.main(["--reduced", "--artifact", str(tmp_path / "art"),
                     "--batch", "2", "--prompt-len", "8", "--gen-len", "2"])
 

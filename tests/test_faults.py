@@ -1,0 +1,265 @@
+"""Fault-tolerance tests: journaled resume, per-unit guards, artifact
+integrity. Injection lives in ``faults.py`` (also the CI smoke CLI)."""
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import faults
+from repro.core import (CalibJournal, CalibJournalError,
+                        CalibrationInterrupted, ReconConfig, quantize)
+from repro.core.quantizer import quantize_dequant
+from repro.deploy import (ArtifactCorruptionError, ArtifactSchemaError,
+                          QuantizedArtifact, rtn_artifact)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """Untrained 2-block LM + 2 calibration batches (shared with the CI
+    smoke CLI so both exercise the same shapes)."""
+    return faults._tiny_setup()
+
+
+def _rc(**kw):
+    base = dict(w_bits=4, iters=6, calib_bs=4)
+    base.update(kw)
+    return ReconConfig(**base)
+
+
+def _assert_bit_exact(a, b):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (pa, xa), (_pb, xb) in zip(fa, fb):
+        assert np.array_equal(np.asarray(xa), np.asarray(xb)), pa
+
+
+# ---------------------------------------------------------------------------
+# resumable calibration
+# ---------------------------------------------------------------------------
+
+
+def test_kill_and_resume_bit_exact(tiny, tmp_path):
+    """SIGTERM after unit 0 -> journal snapshot + CalibrationInterrupted;
+    re-running with the same workdir resumes at unit 1 and reproduces the
+    uninterrupted run bit-for-bit."""
+    cfg, model, params, calib = tiny
+    rc = _rc()
+    ref = quantize(model, params, calib, rc)
+
+    d = str(tmp_path / "journal")
+    with faults.kill_during_unit(0, sig=signal.SIGTERM):
+        with pytest.raises(CalibrationInterrupted) as ei:
+            quantize(model, params, calib, rc, workdir=d)
+    assert ei.value.next_unit == 1
+    assert ei.value.workdir == d
+
+    res = quantize(model, params, calib, rc, workdir=d)
+    assert res.stats["resumed_at_unit"] == 1
+    assert res.stats["n_units"] == ref.stats["n_units"]
+    _assert_bit_exact(ref.params_q, res.params_q)
+    assert set(ref.v) == set(res.v)
+    for p in ref.v:
+        assert np.array_equal(np.asarray(ref.v[p]), np.asarray(res.v[p])), p
+    # per-unit stats survive the journal round trip as arrays
+    for u in res.stats["units"]:
+        assert isinstance(u["loss_trace"], np.ndarray)
+
+
+def test_journal_signature_mismatch(tmp_path):
+    """A journal written by a different run must refuse to resume."""
+    d = str(tmp_path)
+    x = jnp.zeros((2, 4, 8), jnp.float32)
+    j1 = CalibJournal(d, {"rc": "ReconConfig(A)", "n_units": 2})
+    j1.save(1, x, x, None, None,
+            {"blocks.0/attn/wq": jnp.zeros((3,), jnp.float32)}, {},
+            [{"unit": 0}], 1234)
+    assert j1.load()["next_unit"] == 1
+
+    j2 = CalibJournal(d, {"rc": "ReconConfig(B)", "n_units": 2})
+    with pytest.raises(CalibJournalError) as ei:
+        j2.load()
+    assert "rc" in str(ei.value)
+
+
+def test_journal_truncation_is_typed(tmp_path):
+    """A torn snapshot surfaces as CalibJournalError, not a zip traceback."""
+    d = str(tmp_path)
+    x = jnp.zeros((2, 4, 8), jnp.float32)
+    j = CalibJournal(d, {"rc": "ReconConfig(A)"})
+    j.save(1, x, x, None, None, {}, {}, [], 0)
+    faults.truncate_arrays(d, drop_bytes=64)
+    with pytest.raises(CalibJournalError, match="unreadable"):
+        j.load()
+
+
+# ---------------------------------------------------------------------------
+# per-unit guards: NaN retry / RTN fallback / OOM minibatch halving
+# ---------------------------------------------------------------------------
+
+
+def test_nan_retry_recovers(tiny):
+    """One poisoned attempt: the guard retries at reduced lr and the unit
+    completes without falling back."""
+    cfg, model, params, calib = tiny
+    with faults.nan_unit_loop({0}):
+        res = quantize(model, params, calib, _rc(unit_retries=2))
+    assert res.stats["unit_retries"] == 1
+    assert res.stats["unit_fallbacks"] == 0
+    u0 = res.stats["units"][0]
+    assert u0["retries"] == 1 and not u0["fallback"]
+    assert np.isfinite(u0["final_recon_mse"])
+    assert u0["final_recon_mse"] <= u0["rtn_recon_mse"] * 1.5
+    for leaf in jax.tree.leaves(res.params_q):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_nan_fallback_to_rtn(tiny):
+    """Every attempt poisoned: unit 0 degrades to RTN (its paths drop out
+    of v, baked weights equal plain quantize_dequant) while unit 1 still
+    reconstructs normally."""
+    cfg, model, params, calib = tiny
+    rc = _rc(unit_retries=1)  # 2 attempts per unit
+    ref = quantize(model, params, calib, rc)
+    with faults.nan_unit_loop({0, 1}):
+        res = quantize(model, params, calib, rc)
+    assert res.stats["unit_fallbacks"] == 1
+    assert res.stats["unit_retries"] == 1
+    u0 = res.stats["units"][0]
+    assert u0["fallback"] and u0["retries"] == 1
+    assert u0["final_recon_mse"] == u0["rtn_recon_mse"]
+    assert not res.stats["units"][1]["fallback"]
+
+    dropped = set(ref.v) - set(res.v)
+    assert dropped, "fallback unit left its logits in v"
+    prefixes = {p.split("/")[0] for p in dropped}
+    assert len(prefixes) == 1  # exactly one unit degraded
+    assert not any(p.split("/")[0] in prefixes for p in res.v)
+
+    # baked weights of the degraded unit are exactly RTN
+    path = sorted(dropped)[0]
+    st, qcfg = res.qstates[path]
+    sname, ri = path.split("/")[0].rsplit(".", 1)
+    node_q, node_fp = res.params_q[sname], params[sname]
+    for k in path.split("/")[1:]:
+        node_q, node_fp = node_q[k], node_fp[k]
+    w_q = np.asarray(node_q["w"][int(ri)])
+    w_fp = node_fp["w"][int(ri)]
+    np.testing.assert_array_equal(
+        w_q, np.asarray(quantize_dequant(w_fp, st, qcfg)))
+    for leaf in jax.tree.leaves(res.params_q):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_oom_halves_minibatch(tiny):
+    """A device-OOM on the first attempt retries the unit with half the
+    calibration minibatch instead of failing the job."""
+    cfg, model, params, calib = tiny
+    with faults.oom_unit_loop({0}):
+        res = quantize(model, params, calib, _rc())
+    assert res.stats["unit_oom_halvings"] == 1
+    assert res.stats["unit_fallbacks"] == 0
+    u0, u1 = res.stats["units"][:2]
+    assert u0["oom_halvings"] == 1 and u0["calib_bs"] == 2
+    assert u1["oom_halvings"] == 0 and u1["calib_bs"] == 4
+
+
+def test_oom_reraised_when_guard_off(tiny):
+    cfg, model, params, calib = tiny
+    with faults.oom_unit_loop({0}):
+        with pytest.raises(jax.errors.JaxRuntimeError,
+                           match="RESOURCE_EXHAUSTED"):
+            quantize(model, params, calib, _rc(unit_guard=False))
+
+
+# ---------------------------------------------------------------------------
+# artifact integrity
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def saved_artifact(tiny, tmp_path):
+    cfg, model, params, _ = tiny
+    art = rtn_artifact(params, 4, cfg=cfg)
+    d = str(tmp_path / "art")
+    art.save(d)
+    return d, art
+
+
+def test_pristine_artifact_verifies(saved_artifact):
+    d, art = saved_artifact
+    loaded = QuantizedArtifact.load(d)
+    assert loaded.manifest["schema_version"] == art.manifest["schema_version"]
+    assert loaded.manifest["checksums"] == art.manifest["checksums"]
+
+
+def test_bitflip_detected_names_leaf(saved_artifact):
+    d, art = saved_artifact
+    leaf = next(k for k in art.manifest["checksums"]
+                if k.endswith("/w") or k.endswith("/table"))
+    faults.flip_leaf_bit(d, leaf, byte_index=17, bit=3)
+    with pytest.raises(ArtifactCorruptionError) as ei:
+        QuantizedArtifact.load(d)
+    assert ei.value.leaf == leaf
+    assert leaf in str(ei.value)
+
+
+def test_truncation_detected(saved_artifact):
+    d, _ = saved_artifact
+    faults.truncate_arrays(d)
+    with pytest.raises(ArtifactCorruptionError, match="truncated or corrupt"):
+        QuantizedArtifact.load(d)
+
+
+def test_manifest_checksum_edit_detected(saved_artifact):
+    d, art = saved_artifact
+    leaf = next(iter(art.manifest["checksums"]))
+
+    def bump(meta):
+        meta["manifest"]["checksums"][leaf] ^= 1
+
+    faults.edit_manifest(d, bump)
+    with pytest.raises(ArtifactCorruptionError) as ei:
+        QuantizedArtifact.load(d)
+    assert ei.value.leaf == leaf
+
+
+def test_manifest_digest_edit_detected(saved_artifact):
+    d, _ = saved_artifact
+
+    def forge(meta):
+        meta["manifest"]["content_digest"] = "0" * 64
+
+    faults.edit_manifest(d, forge)
+    with pytest.raises(ArtifactCorruptionError, match="edited"):
+        QuantizedArtifact.load(d)
+
+
+def test_stale_schema_version_detected(saved_artifact):
+    d, _ = saved_artifact
+
+    def strip(meta):
+        meta["manifest"].pop("schema_version")
+
+    faults.edit_manifest(d, strip)
+    with pytest.raises(ArtifactSchemaError, match="pre-v2"):
+        QuantizedArtifact.load(d)
+    # escape hatch still loads it
+    assert QuantizedArtifact.load(d, verify=False) is not None
+
+    def future(meta):
+        meta["manifest"]["schema_version"] = 999
+
+    faults.edit_manifest(d, future)
+    with pytest.raises(ArtifactSchemaError):
+        QuantizedArtifact.load(d)
+
+
+def test_no_verify_loads_corrupt_artifact(saved_artifact):
+    d, art = saved_artifact
+    leaf = next(k for k in art.manifest["checksums"] if k.endswith("/w"))
+    faults.flip_leaf_bit(d, leaf)
+    loaded = QuantizedArtifact.load(d, verify=False)
+    assert loaded.params is not None

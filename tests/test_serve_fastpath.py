@@ -50,6 +50,34 @@ def test_qmm_traces_count_tiers(rng):
     reset_tier_counts()
 
 
+def test_decode_tier_override(rng, monkeypatch):
+    """set_decode_tier(False) / REPRO_QMM_DECODE_TIER=0 force decode
+    shapes onto the prefill tier (the gemv specialization loses on some
+    backends); grouped dispatch is unaffected."""
+    qw = from_node(_node(rng), 64)
+    qw3 = from_node(_node(rng, E=3), 64)
+    assert select_tier(2, qw) == "decode"
+    try:
+        qmm_ops.set_decode_tier(False)
+        assert not qmm_ops.decode_tier_enabled()
+        assert select_tier(2, qw) == "prefill"
+        assert select_tier(128, qw) == "prefill"
+        assert select_tier(2, qw3) == "grouped"
+        reset_tier_counts()
+        jax.jit(lambda x: qmm(x, qw))(jnp.ones((2, 64), jnp.float32))
+        assert qmm_ops.TIER_COUNTS == {"decode": 0, "prefill": 1, "grouped": 0}
+    finally:
+        qmm_ops.set_decode_tier(None)
+    reset_tier_counts()
+    # env path, consulted only while no programmatic override is set
+    monkeypatch.setenv("REPRO_QMM_DECODE_TIER", "off")
+    assert not qmm_ops.decode_tier_enabled()
+    assert select_tier(1, qw) == "prefill"
+    monkeypatch.delenv("REPRO_QMM_DECODE_TIER")
+    assert qmm_ops.decode_tier_enabled()
+    assert select_tier(1, qw) == "decode"
+
+
 # ---------------------------------------------------------------------------
 # from_node typed errors
 # ---------------------------------------------------------------------------
@@ -217,3 +245,25 @@ def test_run_prefill_decode_reports_tiers_and_throughput(rng):
                                     batch_size=4, prompt_len=16, gen_len=4,
                                     quiet=True)
     assert fp_stat["qmm_tiers"] == {"decode": 0, "prefill": 0, "grouped": 0}
+
+
+def test_serve_records_decode_tier_override(rng):
+    """With the decode tier disabled, serving routes decode steps through
+    the prefill GEMM and the stats record the override."""
+    from repro.launch.serve import run_prefill_decode
+    from repro.models import get_model
+
+    cfg, model = get_model("brecq_lm_100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    art = rtn_artifact(params, 4, None, cfg=cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)))
+    try:
+        qmm_ops.set_decode_tier(False)
+        _, stat = run_prefill_decode(model, art.params, {"tokens": toks},
+                                     batch_size=4, prompt_len=16, gen_len=4,
+                                     hook=art.hook(), quiet=True)
+    finally:
+        qmm_ops.set_decode_tier(None)
+    assert stat["decode_tier_enabled"] is False
+    assert stat["qmm_tiers"]["decode"] == 0
+    assert stat["qmm_tiers"]["prefill"] > 0
