@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""CI guard over the tracked serving benchmarks.
+
+Two checks, selected by flags (default: both, skipping absent files):
+
+  --serve PATH   BENCH_serve.json   — fail if the decode qmm tier loses
+                 to the legacy path by more than the pinned CPU margin
+                 (``decode_ratio_tier_vs_legacy < --min-tier-ratio``).
+                 Until now that ratio was recorded but never enforced; a
+                 regression sailed through CI silently.
+  --mt PATH      BENCH_serve_mt.json — validate the multi-stream schema
+                 and fail if the int8 paged KV cache stops delivering
+                 ``--min-kv-ratio`` lower resident bytes/stream than the
+                 fp16 reference, or if any stream failed to complete.
+
+Exit 0 = all present checks pass; exit 1 with a readable reason
+otherwise. Run from the repo root:
+
+    python scripts/check_serve_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# Tier-vs-legacy on the CI CPU runner currently sits at ~0.95 (the gemv
+# tier roughly ties legacy on CPU; it wins on accelerators). 0.85 flags
+# a real regression without tripping on runner noise.
+MIN_TIER_RATIO = 0.85
+MIN_KV_RATIO = 1.8
+
+MT_TOP_KEYS = ("config", "int8", "fp16", "kv_bytes_ratio_fp16_over_int8",
+               "sustained_tok_s_int8")
+MT_RUN_KEYS = ("sustained_tok_s", "tokens_generated", "mean_slot_occupancy",
+               "mean_resident_kv_bytes_per_stream", "bytes_per_page",
+               "streams_completed")
+
+
+def fail(msg: str) -> None:
+    print(f"check_serve_bench: FAIL — {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_serve(path: Path, min_ratio: float) -> None:
+    doc = json.loads(path.read_text())
+    ratio = doc.get("decode_ratio_tier_vs_legacy")
+    if ratio is None:
+        fail(f"{path.name} is missing 'decode_ratio_tier_vs_legacy' — "
+             "re-run benchmarks/table6_deploy.py --serve-only")
+    if ratio < min_ratio:
+        fail(
+            f"{path.name}: decode gemv tier runs at {ratio:.3f}x the legacy "
+            f"qmm path, below the pinned floor {min_ratio}. The decode "
+            "tier has regressed; profile kernels/qmm decode_qmm (or bump "
+            "the pin deliberately in scripts/check_serve_bench.py with a "
+            "note in the PR)."
+        )
+    print(f"check_serve_bench: {path.name} ok "
+          f"(tier/legacy {ratio:.3f} >= {min_ratio})")
+
+
+def check_mt(path: Path, min_kv_ratio: float) -> None:
+    doc = json.loads(path.read_text())
+    missing = [k for k in MT_TOP_KEYS if k not in doc]
+    if missing:
+        fail(f"{path.name} missing keys {missing} — re-run "
+             "benchmarks/table7_serve_mt.py")
+    for mode in ("int8", "fp16"):
+        run_missing = [k for k in MT_RUN_KEYS if k not in doc[mode]]
+        if run_missing:
+            fail(f"{path.name}[{mode}] missing keys {run_missing}")
+        want = doc["config"]["streams"]
+        got = doc[mode]["streams_completed"]
+        if got != want:
+            fail(f"{path.name}[{mode}]: only {got}/{want} streams completed")
+    ratio = doc["kv_bytes_ratio_fp16_over_int8"]
+    if ratio < min_kv_ratio:
+        fail(
+            f"{path.name}: int8 paged KV holds only {ratio:.2f}x less "
+            f"resident bytes/stream than fp16 (floor {min_kv_ratio}). "
+            "Check scale storage in models/common.init_paged_kv — scales "
+            "must stay float16."
+        )
+    print(f"check_serve_bench: {path.name} ok "
+          f"(fp16/int8 KV bytes {ratio:.2f}x >= {min_kv_ratio}, "
+          f"{doc['config']['streams']} streams completed)")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--serve", default=str(ROOT / "BENCH_serve.json"))
+    p.add_argument("--mt", default=str(ROOT / "BENCH_serve_mt.json"))
+    p.add_argument("--min-tier-ratio", type=float, default=MIN_TIER_RATIO)
+    p.add_argument("--min-kv-ratio", type=float, default=MIN_KV_RATIO)
+    p.add_argument("--require", choices=["serve", "mt", "both", "any"],
+                   default="any",
+                   help="which files must exist (default: check whatever "
+                        "is present, but fail if neither is)")
+    args = p.parse_args(argv)
+
+    serve, mt = Path(args.serve), Path(args.mt)
+    checked = 0
+    if serve.exists():
+        check_serve(serve, args.min_tier_ratio)
+        checked += 1
+    elif args.require in ("serve", "both"):
+        fail(f"{serve} not found")
+    if mt.exists():
+        check_mt(mt, args.min_kv_ratio)
+        checked += 1
+    elif args.require in ("mt", "both"):
+        fail(f"{mt} not found")
+    if checked == 0:
+        fail("no benchmark JSON found to check")
+
+
+if __name__ == "__main__":
+    main()

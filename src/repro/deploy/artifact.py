@@ -221,7 +221,8 @@ def _verify_checksums(tree, manifest: dict, directory: str) -> None:
 # ---------------------------------------------------------------------------
 
 
-def export(model, result, *, a_bits: Optional[int] = None) -> QuantizedArtifact:
+def export(model, result, *, a_bits: Optional[int] = None,
+           kv_dtype: str = "int8", kv_page_size: int = 16) -> QuantizedArtifact:
     """Pack a calibrated :class:`PTQResult` into a :class:`QuantizedArtifact`.
 
     Args:
@@ -233,6 +234,8 @@ def export(model, result, *, a_bits: Optional[int] = None) -> QuantizedArtifact:
         the 8-bit embed/head.
       a_bits: activation bit-width matching ``result.act_scales``; taken
         from ``result.stats`` when calibration recorded it.
+      kv_dtype / kv_page_size: serving-side KV cache policy recorded in
+        the manifest — ``ServeEngine.from_artifact`` defaults to them.
 
     Returns:
       Artifact whose dequantized weights equal ``result.params_q``
@@ -301,6 +304,7 @@ def export(model, result, *, a_bits: Optional[int] = None) -> QuantizedArtifact:
         "n_layers": cfg.n_layers, "d_model": cfg.d_model, "vocab": cfg.vocab,
         "tie_embeddings": cfg.tie_embeddings,
         "w_group": group, "a_bits": a_bits,
+        "kv_dtype": kv_dtype, "kv_page_size": kv_page_size,
         "bits_by_path": bits_by_path,
     }
     artifact = QuantizedArtifact(art, dict(result.act_scales), manifest)
@@ -322,7 +326,8 @@ def _scale_rows(scale: Array, w_ndim: int) -> Array:
 
 
 def rtn_artifact(params: Params, bits: int, group: Optional[int] = None,
-                 *, cfg=None) -> QuantizedArtifact:
+                 *, cfg=None, kv_dtype: str = "int8",
+                 kv_page_size: int = 16) -> QuantizedArtifact:
     """Calibration-free artifact: :func:`quantize_tree` + manifest/stats.
 
     The phantom ``dist.deploy`` replacement for quick serving experiments
@@ -342,6 +347,7 @@ def rtn_artifact(params: Params, bits: int, group: Optional[int] = None,
         "vocab": getattr(cfg, "vocab", None),
         "tie_embeddings": getattr(cfg, "tie_embeddings", None),
         "w_group": group, "a_bits": None,
+        "kv_dtype": kv_dtype, "kv_page_size": kv_page_size,
         "bits_by_path": bits_by_path,
     }
     artifact = QuantizedArtifact(packed, {}, manifest)

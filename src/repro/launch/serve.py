@@ -56,6 +56,23 @@ def parse_args(argv=None):
     p.add_argument("--no-verify", action="store_true",
                    help="skip artifact schema/checksum verification at load "
                         "(escape hatch for pre-v2 or known-good artifacts)")
+    p.add_argument("--engine", action="store_true",
+                   help="serve through the continuous-batching engine "
+                        "(repro.serve_engine) instead of the fixed-batch "
+                        "harness; --batch becomes the slot count")
+    p.add_argument("--streams", type=int, default=None,
+                   help="number of synthetic request streams for --engine "
+                        "(staggered arrivals, mixed lengths; default: "
+                        "2x the slot count)")
+    p.add_argument("--kv-dtype", default=None,
+                   choices=["int8", "float16", "bfloat16", "float32"],
+                   help="engine KV pool dtype (default: artifact manifest "
+                        "kv_dtype, else int8)")
+    p.add_argument("--page-size", type=int, default=None,
+                   help="engine KV page size in tokens (default: manifest "
+                        "kv_page_size, else 16)")
+    p.add_argument("--prefill-chunk", type=int, default=32,
+                   help="engine prefill chunk length (tokens per tick)")
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args(argv)
 
@@ -185,7 +202,63 @@ def main(argv=None, params=None):
             tmp_dir.cleanup()
 
 
+def _serve_engine(args, cfg, model, params, artifact, fp_bytes):
+    """Continuous-batching mode: N synthetic streams with staggered
+    arrivals and mixed prompt/gen lengths through the serve engine.
+    The fixed-batch harness is the degenerate case (one arrival wave,
+    uniform lengths)."""
+    from ..serve_engine import EngineConfig, ServeEngine
+
+    manifest = artifact.manifest if artifact is not None else {}
+    kv_dtype = args.kv_dtype or manifest.get("kv_dtype") or "int8"
+    page_size = args.page_size or int(manifest.get("kv_page_size") or 16)
+    num_slots = args.batch
+    streams = args.streams or 2 * num_slots
+    max_len = args.prompt_len + args.gen_len
+    pages_per = -(-max_len // page_size)
+    ecfg = EngineConfig(
+        num_slots=num_slots, page_size=page_size,
+        num_pages=1 + num_slots * pages_per, max_len=max_len,
+        prefill_chunk=min(args.prefill_chunk, max(args.prompt_len, 1)),
+        kv_dtype=kv_dtype)
+    hook = artifact.hook() if artifact is not None else None
+    weights = artifact.params if artifact is not None else params
+    from ..models.common import NO_QUANT
+    eng = ServeEngine(model, weights, ecfg, quant=hook or NO_QUANT)
+    t_compile = eng.compile()
+
+    rng = np.random.default_rng(args.seed)
+    corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
+    arrivals = sorted(int(a) for a in rng.integers(0, 4 * streams, streams))
+    plens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1,
+                         streams)
+    gens = rng.integers(max(args.gen_len // 2, 1), args.gen_len + 1, streams)
+    prompts = [corpus.sample(1, int(plens[i]), seed=args.seed + i)[0]
+               for i in range(streams)]
+    nxt = 0
+    while nxt < streams or eng.pending():
+        while nxt < streams and arrivals[nxt] <= eng.tick:
+            eng.submit(prompts[nxt], int(gens[nxt]))
+            nxt += 1
+        eng.step()
+    eng.assert_no_leaks()
+    m = eng.metrics()
+    print(f"[engine {kv_dtype}] compile {t_compile:.2f}s; {streams} streams "
+          f"over {num_slots} slots: {m['tokens_generated']} tokens in "
+          f"{m['wall_s']:.2f}s ({m['sustained_tok_s']:.1f} tok/s sustained); "
+          f"occupancy {m['mean_slot_occupancy']:.2f}; resident KV "
+          f"{m['mean_resident_kv_bytes_per_stream']/1e3:.1f}KB/stream "
+          f"(page {page_size} tok, {m['bytes_per_page']/1e3:.1f}KB)")
+    return m
+
+
 def _serve(args, cfg, model, params, artifact, fp_bytes):
+    if args.engine:
+        if artifact is not None:
+            art_bytes = artifact.nbytes()
+            print(f"weights resident as packed int codes: "
+                  f"{fp_bytes/1e6:.1f}MB fp32 -> {art_bytes/1e6:.1f}MB packed")
+        return _serve_engine(args, cfg, model, params, artifact, fp_bytes)
     corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
     prompts = jnp.asarray(corpus.sample(args.batch, args.prompt_len, seed=7))
     batch = {"tokens": prompts}

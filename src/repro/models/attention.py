@@ -136,25 +136,39 @@ def prefill(ctx: Ctx, p, spec: AttnSpec, x: Array, cache) -> tuple[Array, dict]:
 
 
 def decode(ctx: Ctx, p, spec: AttnSpec, x: Array, cache) -> tuple[Array, dict]:
-    """One-token decode: append to cache, attend over it.
+    """Cached decode: append C new tokens to the cache, attend over it.
 
-    ``ctx.positions`` is (B, 1) with the current absolute position.
+    ``ctx.positions`` is (B, C) with the tokens' absolute positions —
+    C = 1 for plain decode, C > 1 for a chunked-prefill step through the
+    same cached path. ``cache`` is either the dense ring buffer from
+    :func:`init_cache` or one layer's paged-pool slice (serve engine),
+    dispatched through ``cm.is_paged``; the paged path reads the block
+    tables from ``ctx.extras["paged"]``.
     """
-    B = x.shape[0]
+    B, C = x.shape[:2]
     q, k, v = _project_qkv(ctx, p, spec, x)
     if spec.use_rope:
         q = cm.apply_rope(q, ctx.positions, spec.rope_theta)
         k = cm.apply_rope(k, ctx.positions, spec.rope_theta)
+    if cm.is_paged(cache):
+        pg = ctx.extras["paged"]
+        cache = cm.paged_append(cache, k, v, pg["block_tables"],
+                                ctx.positions, pg["page_size"])
+        out = cm.paged_attend(q, cache, pg["block_tables"], ctx.positions,
+                              pg["page_size"], window=spec.window,
+                              backend=pg.get("backend", "auto"))
+        out = out.reshape(B, C, spec.n_heads * spec.head_dim)
+        return cm.dense(ctx, p, "wo", out), cache
     slots = cache["k"].shape[1]
-    pos = ctx.positions[:, 0]  # (B,)
+    pos = ctx.positions  # (B, C)
     slot = (pos % slots).astype(jnp.int32)
     # vmapped per-batch scatter: explicit arange(B) indices would make the
     # scatter unpartitionable and GSPMD would re-gather the whole cache
     upd = jax.vmap(lambda c, s, val: c.at[s].set(val))
     shard = ctx.extras.get("cache_shard") or (lambda t, leaf: t)
     cache = {
-        "k": shard(upd(cache["k"], slot, k[:, 0].astype(cache["k"].dtype)), "k"),
-        "v": shard(upd(cache["v"], slot, v[:, 0].astype(cache["v"].dtype)), "v"),
+        "k": shard(upd(cache["k"], slot, k.astype(cache["k"].dtype)), "k"),
+        "v": shard(upd(cache["v"], slot, v.astype(cache["v"].dtype)), "v"),
         "pos": shard(upd(cache["pos"], slot, pos.astype(jnp.int32)), "pos"),
     }
     # replicate the (tiny) query so attention computes against the cache
@@ -163,9 +177,9 @@ def decode(ctx: Ctx, p, spec: AttnSpec, x: Array, cache) -> tuple[Array, dict]:
     q = shard(q, "q")
     out = cm.decode_attend(
         q, cache["k"].astype(q.dtype), cache["v"].astype(q.dtype),
-        cache["pos"], pos[:, None], window=spec.window,
+        cache["pos"], pos, window=spec.window,
         shard=(shard if "cache_shard" in ctx.extras else None))
-    out = out.reshape(B, 1, spec.n_heads * spec.head_dim)
+    out = out.reshape(B, C, spec.n_heads * spec.head_dim)
     return cm.dense(ctx, p, "wo", out), cache
 
 

@@ -389,28 +389,183 @@ def decode_attend(
     window: Optional[int] = None,
     shard=None,
 ) -> Array:
-    """Single-token decode attention against a cache.
+    """Decode attention against a cache for one or a few query tokens.
 
     GQA-native (no head-repeat of the cache): the cache stays in its
     (B, S, K, hd) layout — typically sequence-sharded — and the grouped
     einsums contract against it in place. ``shard`` optionally pins the
     score sharding so GSPMD keeps the reduction distributed.
 
-    q: (B,1,H,hd); caches (B,S,K,hd); k_pos (B,S) absolute positions of
-    cache slots (-1 for empty); cur_pos scalar/array current position.
+    q: (B,C,H,hd) — C=1 for single-token decode, C>1 for a chunked
+    prefill step reading KV already appended to the cache (per-token
+    causality falls out of the position mask); caches (B,S,K,hd); k_pos
+    (B,S) absolute positions of cache slots (-1 for empty); cur_pos
+    (B,C) current position of each query token.
     """
-    B, _, H, hd = q.shape
+    B, C, H, hd = q.shape
     K = k_cache.shape[2]
     G = H // K
-    qg = q.reshape(B, K, G, hd)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    qg = q.reshape(B, C, K, G, hd)
+    s = jnp.einsum("bckgd,bskd->bckgs", qg, k_cache).astype(jnp.float32)
     s = s / jnp.sqrt(hd)
-    valid = (k_pos >= 0) & (k_pos <= cur_pos)
+    valid = (k_pos[:, None] >= 0) & (k_pos[:, None] <= cur_pos[..., None])
     if window is not None:
-        valid = valid & (cur_pos - k_pos < window)
-    s = jnp.where(valid[:, None, None, :], s, MASK_VALUE)
+        valid = valid & (cur_pos[..., None] - k_pos[:, None] < window)
+    s = jnp.where(valid[:, :, None, None, :], s, MASK_VALUE)
     if shard is not None:
         s = shard(s, "scores")
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
-    return out.reshape(B, 1, H, hd)
+    out = jnp.einsum("bckgs,bskd->bckgd", p, v_cache)
+    return out.reshape(B, C, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (serve engine)
+# ---------------------------------------------------------------------------
+#
+# The serve engine stores KV in a global page pool per attention layer
+# instead of one dense (B, S, K, hd) buffer per stream. A *page* holds
+# ``page_size`` consecutive token slots for every kv head; a stream owns
+# an ordered list of pages (its *block table* row, shared by all layers
+# since every layer caches the same token sequence). Token at absolute
+# position ``t`` always lives at row ``t`` of its stream's gathered view
+# (identity layout: page ``t // page_size``, offset ``t % page_size``),
+# so masks reduce to plain position comparisons and batched serving is
+# bitwise independent of which physical pages a stream happened to get.
+#
+# Attention reads KV through this handle — :func:`paged_append` then
+# :func:`paged_attend` — never through dense arrays. ``kv_dtype='int8'``
+# stores codes + per-(token, head) scales produced by
+# ``kernels.kvattn.quantize_kv`` and decodes single-token steps through
+# ``kernels.kvattn.attend_int8`` (the int8 decode-attention kernel);
+# float dtypes are the reference mode. Scales are stored float16: the
+# resident-bytes win is the point of int8 KV, and at head_dim 32 an f32
+# scale pair would eat a third of it.
+
+PAGED_KV_DTYPES = ("int8", "float16", "bfloat16", "float32")
+
+
+def init_paged_kv(num_pages: int, page_size: int, n_kv_heads: int,
+                  head_dim: int, kv_dtype: str = "int8") -> Params:
+    """One attention layer's share of the paged KV pool.
+
+    int8 pools carry ``k_scale``/``v_scale`` pages beside the code
+    pages; float pools are just typed pages. Page 0 is reserved by the
+    engine as the write sink for inactive slots and never handed to a
+    stream."""
+    if kv_dtype not in PAGED_KV_DTYPES:
+        raise ValueError(f"kv_dtype {kv_dtype!r} not in {PAGED_KV_DTYPES}")
+    if kv_dtype == "int8":
+        return {
+            "k_pages": jnp.zeros((num_pages, page_size, n_kv_heads, head_dim), jnp.int8),
+            "v_pages": jnp.zeros((num_pages, page_size, n_kv_heads, head_dim), jnp.int8),
+            "k_scale": jnp.zeros((num_pages, page_size, n_kv_heads), jnp.float16),
+            "v_scale": jnp.zeros((num_pages, page_size, n_kv_heads), jnp.float16),
+        }
+    dt = jnp.dtype(kv_dtype)
+    return {
+        "k_pages": jnp.zeros((num_pages, page_size, n_kv_heads, head_dim), dt),
+        "v_pages": jnp.zeros((num_pages, page_size, n_kv_heads, head_dim), dt),
+    }
+
+
+def is_paged(cache: Params) -> bool:
+    """Distinguishes a paged-pool cache node from the dense ``{k, v,
+    pos}`` ring buffer — the dispatch point for the KV handle."""
+    return isinstance(cache, dict) and "k_pages" in cache
+
+
+def _page_rows(block_tables: Array, positions: Array, page_size: int) -> Array:
+    """Flat pool-row index for each (stream, position). Writes with no
+    real page — unallocated block-table entries (-1), positions past the
+    table's capacity (padded chunk tails) — land on page 0, the engine's
+    write sink."""
+    pidx = positions // page_size
+    page_ids = jnp.take_along_axis(
+        block_tables, jnp.clip(pidx, 0, block_tables.shape[1] - 1), axis=1)
+    page_ids = jnp.where(pidx < block_tables.shape[1], page_ids, -1)
+    return jnp.maximum(page_ids, 0) * page_size + positions % page_size
+
+
+def paged_append(cache: Params, k: Array, v: Array, block_tables: Array,
+                 positions: Array, page_size: int) -> Params:
+    """Write C new tokens' K/V into the page pool.
+
+    k, v: (B, C, K, hd) float; block_tables (B, max_pages) int32 (-1 =
+    unallocated); positions (B, C) absolute token positions. int8 pools
+    quantize through ``kernels.kvattn.quantize_kv`` on the way in.
+    Distinct streams own distinct pages, so the scatter has no
+    cross-stream collisions; all inactive-slot writes land on page 0.
+    """
+    B, C = positions.shape
+    rows = _page_rows(block_tables, positions, page_size).reshape(-1)
+
+    def scat(pool, vals):
+        flat = pool.reshape(pool.shape[0] * page_size, *pool.shape[2:])
+        flat = flat.at[rows].set(
+            vals.reshape(B * C, *vals.shape[2:]).astype(pool.dtype))
+        return flat.reshape(pool.shape)
+
+    if "k_scale" in cache:
+        from ..kernels.kvattn.ops import quantize_kv
+
+        k8, v8, ks, vs = quantize_kv(k, v)
+        return {"k_pages": scat(cache["k_pages"], k8),
+                "v_pages": scat(cache["v_pages"], v8),
+                "k_scale": scat(cache["k_scale"], ks),
+                "v_scale": scat(cache["v_scale"], vs)}
+    return {"k_pages": scat(cache["k_pages"], k),
+            "v_pages": scat(cache["v_pages"], v)}
+
+
+def paged_view(cache: Params, block_tables: Array, page_size: int):
+    """Gather a dense per-stream view of the pool.
+
+    Returns ``(gather, kpos)``: ``gather(pool)`` -> (B, S_cap, K, hd)
+    with token ``t`` at row ``t`` (S_cap = max_pages * page_size), and
+    ``kpos`` (B, S_cap) int32 — the row's token position where the row's
+    page is allocated, -1 elsewhere (rows of an allocated page beyond
+    the stream's written length are masked by the caller's ``<= cur``
+    position check, exactly like the dense cache's empty slots)."""
+    B, MP = block_tables.shape
+    s_cap = MP * page_size
+    rows = (jnp.maximum(block_tables, 0)[..., None] * page_size
+            + jnp.arange(page_size, dtype=jnp.int32)).reshape(B, s_cap)
+
+    def gather(pool):
+        flat = pool.reshape(pool.shape[0] * page_size, *pool.shape[2:])
+        return flat[rows]
+
+    allocated = jnp.repeat(block_tables >= 0, page_size, axis=1)
+    kpos = jnp.where(allocated, jnp.arange(s_cap, dtype=jnp.int32)[None], -1)
+    return gather, kpos
+
+
+def paged_attend(q: Array, cache: Params, block_tables: Array,
+                 positions: Array, page_size: int, *,
+                 window: Optional[int] = None, backend: str = "auto") -> Array:
+    """Attention over a paged KV cache: the read half of the handle.
+
+    q: (B, C, H, hd); positions (B, C) absolute positions of the query
+    tokens (already appended). Single-token int8 decode goes through the
+    ``kernels.kvattn`` int8 decode-attention kernel (``attend_int8``);
+    chunked-prefill reads (C > 1) and float pools dequantize the
+    gathered view and share :func:`decode_attend`.
+    """
+    gather, kpos = paged_view(cache, block_tables, page_size)
+    if "k_scale" in cache:
+        k8, v8 = gather(cache["k_pages"]), gather(cache["v_pages"])
+        ks = gather(cache["k_scale"]).astype(jnp.float32)
+        vs = gather(cache["v_scale"]).astype(jnp.float32)
+        if q.shape[1] == 1:
+            from ..kernels.kvattn.ops import attend_int8
+
+            out = attend_int8(q[:, 0], k8, v8, ks, vs, kpos, positions[:, 0],
+                              window=window, backend=backend)
+            return out[:, None]
+        k = (k8.astype(jnp.float32) * ks[..., None]).astype(q.dtype)
+        v = (v8.astype(jnp.float32) * vs[..., None]).astype(q.dtype)
+        return decode_attend(q, k, v, kpos, positions, window=window)
+    k = gather(cache["k_pages"]).astype(q.dtype)
+    v = gather(cache["v_pages"]).astype(q.dtype)
+    return decode_attend(q, k, v, kpos, positions, window=window)

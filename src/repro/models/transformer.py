@@ -306,6 +306,30 @@ class LM:
                 lambda a: jnp.broadcast_to(a[None], (stack.n, *a.shape)), one)
         return cache
 
+    def init_paged_cache(self, num_pages: int, page_size: int,
+                         kv_dtype: str = "int8"):
+        """Paged KV pools for the serve engine — one pool per attention
+        sub-layer, stacked along the scan dim like :meth:`init_cache`.
+        All layers share one block table (they cache the same token
+        sequence), so only the pools live here. Recurrent / cross-attn
+        mixers have no paged form and are rejected up front."""
+        cfg = self.cfg
+        cache = {}
+        for stack in self.stacks:
+            one = {}
+            for i, sub in enumerate(stack.subs):
+                if sub.mixer != "attn":
+                    raise ValueError(
+                        f"paged KV serving needs attention-only mixers; "
+                        f"stack {stack.name!r} sub {i} is {sub.mixer!r}")
+                spec = _attn_spec(cfg, sub)
+                one[f"sub{i}"] = {"attn": cm.init_paged_kv(
+                    num_pages, page_size, spec.n_kv_heads, spec.head_dim,
+                    kv_dtype)}
+            cache[stack.name] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (stack.n, *a.shape)), one)
+        return cache
+
     def _sub_prefill(self, ctx: Ctx, sub: SubLayer, idx: int, p, x, cache):
         cfg = self.cfg
         sc = ctx.scoped(f"sub{idx}")
@@ -388,11 +412,18 @@ class LM:
 
     def decode_step(self, params, tokens: Array, cache, pos: Array,
                     quant: QuantHook = NO_QUANT, extras: Optional[dict] = None,
-                    act_shard=None):
-        """One decode step. tokens (B,1); pos (B,) absolute position."""
-        B = tokens.shape[0]
+                    act_shard=None, *, all_logits: bool = False):
+        """Decode C tokens in one cached step.
+
+        tokens (B, C); pos (B,) absolute position of ``tokens[:, 0]``
+        (consecutive positions are assigned within the chunk). C = 1 is
+        plain decode; C > 1 is a chunked-prefill step through the same
+        cached path. Returns last-position logits (B, V), or the full
+        (B, C, V) when ``all_logits``.
+        """
+        B, C = tokens.shape
         shard = (lambda t: act_shard(t)) if act_shard else (lambda t: t)
-        positions = pos[:, None].astype(jnp.int32)
+        positions = (pos[:, None] + jnp.arange(C)[None]).astype(jnp.int32)
         ctx = Ctx(cfg=self.cfg, positions=positions, quant=quant, decode=True)
         if extras:
             ctx.extras.update(extras)
@@ -408,7 +439,7 @@ class LM:
 
             x, cache[stack.name] = jax.lax.scan(body, x, (params[stack.name], cache[stack.name]))
         logits = self.finish(params, x, ctx)
-        return logits[:, 0], cache
+        return (logits if all_logits else logits[:, -1]), cache
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,12 @@
+"""Request-level serving over a packed :class:`~repro.deploy.QuantizedArtifact`.
+
+Slot-based continuous batching with a paged KV cache: new prompts are
+admitted into freed decode slots, prefill runs in chunks interleaved
+with decode ticks, and KV lives in per-layer page pools (int8 codes +
+scales through ``kernels/kvattn``, or float reference mode) indexed by
+one block table per stream. See ``docs/serving.md``.
+"""
+from .engine import EngineConfig, Request, RequestState, ServeEngine
+from .pages import PagePool
+
+__all__ = ["EngineConfig", "PagePool", "Request", "RequestState", "ServeEngine"]

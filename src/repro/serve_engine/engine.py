@@ -1,0 +1,379 @@
+"""Continuous-batching scheduler: slots, chunked prefill, paged decode.
+
+The engine owns ``num_slots`` decode slots and one paged KV pool
+(``models.LM.init_paged_cache``). A tick is: admit waiting requests
+into free slots (reserving their worst-case page need up front, so
+decode can never hit pool exhaustion mid-stream), advance ONE
+prefilling stream by one chunk (round-robin — keeps time-to-first-token
+bounded without starving decode), then run one batched decode step over
+every decoding slot. Two compiled programs cover everything: a
+(num_slots, 1) decode step and a (1, prefill_chunk) prefill step, both
+the same ``decode_step`` cached path — chunked prefill *is* multi-token
+decode.
+
+Scheduling is host-side Python over numpy block tables; the device sees
+fixed-shape programs and a traced block table, so slot churn never
+recompiles. Inactive slots decode a dummy token against an all--1 block
+table row, which routes their KV writes to the reserved sink page (see
+``models.common``). Outputs are greedy argmax — the engine serves
+deterministic synthetic traffic for benchmarks and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.common import NO_QUANT, PAGED_KV_DTYPES
+from .pages import PagePool
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 8
+    page_size: int = 16
+    num_pages: int = 257          # includes the reserved sink page 0
+    max_len: int = 256            # hard cap on prompt + generated per stream
+    prefill_chunk: int = 32
+    kv_dtype: str = "int8"        # member of models.common.PAGED_KV_DTYPES
+    backend: str = "auto"         # kvattn backend for the int8 decode read
+    record_logits: bool = False   # keep per-step decode logits (tests only)
+
+    @property
+    def max_pages_per_stream(self) -> int:
+        return -(-self.max_len // self.page_size)
+
+    def __post_init__(self):
+        if self.kv_dtype not in PAGED_KV_DTYPES:
+            raise ValueError(f"kv_dtype {self.kv_dtype!r} not in {PAGED_KV_DTYPES}")
+        if self.num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is the sink)")
+
+
+# request lifecycle: waiting -> prefill -> decode -> done | cancelled
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new: int
+    state: str = "waiting"
+    slot: int = -1
+    prefill_off: int = 0
+    generated: list = dataclasses.field(default_factory=list)
+    logits: list = dataclasses.field(default_factory=list)
+
+
+RequestState = ("waiting", "prefill", "decode", "done", "cancelled")
+
+
+class ServeEngine:
+    """Request-level serving over one model + weight set.
+
+    ``quant`` is the artifact's :class:`QuantHook` (weights stay packed
+    int codes through every linear); ``NO_QUANT`` serves FP weights.
+    """
+
+    def __init__(self, model, params, cfg: EngineConfig = EngineConfig(), *,
+                 quant=NO_QUANT):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.cache = model.init_paged_cache(cfg.num_pages, cfg.page_size,
+                                            cfg.kv_dtype)
+        self.pool = PagePool(cfg.num_pages)
+        self.block_tables = np.full(
+            (cfg.num_slots, cfg.max_pages_per_stream), -1, np.int32)
+        self.slot_req: list[Optional[Request]] = [None] * cfg.num_slots
+        self.waiting: deque[Request] = deque()
+        self.requests: dict[int, Request] = {}
+        self.events: list[tuple[int, str, int]] = []
+        self.tick = 0
+        self._uid = 0
+        self._pf_ptr = 0
+        self._decode_ticks = 0
+        self.decode_tick_log: list[int] = []  # tick ids that ran a decode step
+        self._tokens_generated = 0
+        self._occupancy: list[float] = []
+        self._resident: list[float] = []
+        self._peak_pages = 0
+        self._wall_s = 0.0
+        self._compile_s: Optional[float] = None
+        # whole-model KV bytes per page: every pool leaf is
+        # (stack_n, num_pages, page_size, ...), so nbytes/num_pages sums
+        # one page's footprint across all layers (scales included)
+        self.bytes_per_page = sum(
+            leaf.nbytes // cfg.num_pages
+            for leaf in jax.tree.leaves(self.cache))
+
+        ps, backend = cfg.page_size, cfg.backend
+
+        def extras(bt):
+            return {"paged": {"block_tables": bt, "page_size": ps,
+                              "backend": backend}}
+
+        def decode_fn(params, tokens, cache, pos, bt):
+            return model.decode_step(params, tokens, cache, pos, quant,
+                                     extras=extras(bt))
+
+        def chunk_fn(params, tokens, cache, pos, bt):
+            return model.decode_step(params, tokens, cache, pos, quant,
+                                     extras=extras(bt), all_logits=True)
+
+        self._decode_jit = jax.jit(decode_fn)
+        self._chunk_jit = jax.jit(chunk_fn)
+        self._decode_c = self._chunk_c = None
+
+    @classmethod
+    def from_artifact(cls, artifact_dir: str, *, arch: Optional[str] = None,
+                      reduced: bool = False,
+                      cfg: Optional[EngineConfig] = None) -> "ServeEngine":
+        """Build an engine from a saved artifact directory.
+
+        The load verifies schema + per-leaf checksums first, so a
+        corrupted artifact raises ``ArtifactCorruptionError`` before any
+        engine state exists — no slot is ever admitted against damaged
+        weights. KV dtype / page size default from the manifest (written
+        at export) when ``cfg`` is not given.
+        """
+        from ..deploy import QuantizedArtifact
+        from ..models import get_model
+
+        artifact = QuantizedArtifact.load(artifact_dir, verify=True)
+        m = artifact.manifest
+        if cfg is None:
+            cfg = EngineConfig(kv_dtype=m.get("kv_dtype", "int8"),
+                               page_size=int(m.get("kv_page_size", 16)))
+        _, model = get_model(arch or m["arch"], reduced=reduced)
+        return cls(model, artifact.params, cfg, quant=artifact.hook())
+
+    # -- request surface ---------------------------------------------------
+
+    def submit(self, prompt, max_new: int, uid: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if len(prompt) + max_new > self.cfg.max_len:
+            raise ValueError(
+                f"prompt {len(prompt)} + max_new {max_new} exceeds "
+                f"max_len {self.cfg.max_len}")
+        if uid is None:
+            uid = self._uid
+        self._uid = max(self._uid, uid) + 1
+        req = Request(uid, prompt, max_new)
+        self.requests[uid] = req
+        self.waiting.append(req)
+        self._log("submit", uid)
+        return uid
+
+    def cancel(self, uid: int) -> bool:
+        """Abort a request; its pages return to the pool immediately."""
+        req = self.requests.get(uid)
+        if req is None or req.state in ("done", "cancelled"):
+            return False
+        if req.state == "waiting":
+            self.waiting.remove(req)
+        else:
+            self._release(req)
+        req.state = "cancelled"
+        self._log("cancel", uid)
+        return True
+
+    def pending(self) -> bool:
+        return bool(self.waiting) or any(r is not None for r in self.slot_req)
+
+    # -- scheduler tick ----------------------------------------------------
+
+    def step(self) -> bool:
+        """One tick: admit, one prefill chunk, one batched decode step."""
+        self._ensure_compiled()
+        t0 = time.time()
+        self._admit()
+        did = self._prefill_one()
+        did = self._decode_all() or did
+        self._peak_pages = max(self._peak_pages, self.pool.pages_in_use)
+        self.tick += 1
+        self._wall_s += time.time() - t0
+        return did or self.pending()
+
+    def run(self, max_ticks: Optional[int] = None) -> dict:
+        """Tick until every submitted request finishes; returns metrics."""
+        limit = self.tick + max_ticks if max_ticks is not None else None
+        while self.pending() and (limit is None or self.tick < limit):
+            self.step()
+        if self.pending():
+            raise RuntimeError(f"run() hit max_ticks={max_ticks} with "
+                               f"requests still pending")
+        return self.metrics()
+
+    def compile(self) -> float:
+        """AOT-compile both device programs; returns compile seconds.
+        Called lazily by step() — call it up front to keep compile out
+        of measured serving walls."""
+        if self._compile_s is None:
+            cfg = self.cfg
+            t0 = time.time()
+            bt = jnp.asarray(self.block_tables)
+            tok = jnp.zeros((cfg.num_slots, 1), jnp.int32)
+            pos = jnp.zeros((cfg.num_slots,), jnp.int32)
+            self._decode_c = self._decode_jit.lower(
+                self.params, tok, self.cache, pos, bt).compile()
+            tokc = jnp.zeros((1, cfg.prefill_chunk), jnp.int32)
+            self._chunk_c = self._chunk_jit.lower(
+                self.params, tokc, self.cache, pos[:1], bt[:1]).compile()
+            self._compile_s = time.time() - t0
+        return self._compile_s
+
+    # -- invariants / metrics ----------------------------------------------
+
+    def assert_no_leaks(self) -> None:
+        """Every page refcount back to zero and every block table clear."""
+        self.pool.check_no_leaks()
+        if (self.block_tables != -1).any():
+            raise AssertionError("block table rows not cleared after release")
+
+    def metrics(self) -> dict:
+        toks = self._tokens_generated
+        return {
+            "ticks": self.tick,
+            "decode_ticks": self._decode_ticks,
+            "tokens_generated": toks,
+            "wall_s": self._wall_s,
+            "compile_s": self._compile_s or 0.0,
+            "sustained_tok_s": toks / self._wall_s if self._wall_s else 0.0,
+            "mean_slot_occupancy": (float(np.mean(self._occupancy))
+                                    if self._occupancy else 0.0),
+            "bytes_per_page": self.bytes_per_page,
+            "peak_pages_in_use": self._peak_pages,
+            "mean_resident_kv_bytes_per_stream": (
+                float(np.mean(self._resident)) if self._resident else 0.0),
+            "kv_dtype": self.cfg.kv_dtype,
+            "page_size": self.cfg.page_size,
+            "num_slots": self.cfg.num_slots,
+        }
+
+    # -- internals ---------------------------------------------------------
+
+    def _log(self, event: str, uid: int) -> None:
+        self.events.append((self.tick, event, uid))
+
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.cfg.page_size)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.cfg.num_slots) if self.slot_req[s] is None]
+        while self.waiting and free:
+            req = self.waiting[0]
+            need = self._pages_for(len(req.prompt) + req.max_new)
+            if not self.pool.can_reserve(need):
+                break  # head-of-line: preserve FIFO completion order
+            self.waiting.popleft()
+            self.pool.reserve(req.uid, need)
+            req.slot = free.pop(0)
+            self.slot_req[req.slot] = req
+            req.state = "prefill"
+            self._log("admit", req.uid)
+
+    def _release(self, req: Request) -> None:
+        self.pool.free_owner(req.uid)
+        if req.slot >= 0:
+            self.block_tables[req.slot, :] = -1
+            self.slot_req[req.slot] = None
+            req.slot = -1
+
+    def _ensure_pages(self, req: Request, last_pos: int) -> None:
+        """Lazily allocate pages to cover positions [0, last_pos]."""
+        need = last_pos // self.cfg.page_size + 1
+        while self.pool.refcount(req.uid) < need:
+            n = self.pool.refcount(req.uid)
+            self.block_tables[req.slot, n] = self.pool.alloc(req.uid)
+
+    def _ensure_compiled(self) -> None:
+        if self._decode_c is None:
+            self.compile()
+
+    def _prefill_one(self) -> bool:
+        ns = self.cfg.num_slots
+        for i in range(ns):
+            s = (self._pf_ptr + i) % ns
+            req = self.slot_req[s]
+            if req is not None and req.state == "prefill":
+                self._pf_ptr = (s + 1) % ns
+                self._prefill_chunk(req)
+                return True
+        return False
+
+    def _prefill_chunk(self, req: Request) -> None:
+        C = self.cfg.prefill_chunk
+        off = req.prefill_off
+        chunk = req.prompt[off:off + C]
+        n_real = len(chunk)
+        if n_real < C:  # ragged tail: pads write to the sink / dead rows
+            chunk = np.pad(chunk, (0, C - n_real))
+        self._ensure_pages(req, off + n_real - 1)
+        s = req.slot
+        logits, self.cache = self._chunk_c(
+            self.params, jnp.asarray(chunk[None]), self.cache,
+            jnp.full((1,), off, jnp.int32),
+            jnp.asarray(self.block_tables[s:s + 1]))
+        req.prefill_off = off + n_real
+        self._log("prefill_chunk", req.uid)
+        if req.prefill_off >= len(req.prompt):
+            lg = np.asarray(logits[0, n_real - 1])
+            req.generated.append(int(lg.argmax()))
+            if self.cfg.record_logits:
+                req.logits.append(lg)
+            req.state = "decode"
+            self._tokens_generated += 1
+            self._log("first_token", req.uid)
+            self._maybe_finish(req)
+
+    def _decode_all(self) -> bool:
+        cfg = self.cfg
+        decoding = [s for s in range(cfg.num_slots)
+                    if self.slot_req[s] is not None
+                    and self.slot_req[s].state == "decode"]
+        if not decoding:
+            return False
+        tokens = np.zeros((cfg.num_slots, 1), np.int32)
+        pos = np.zeros((cfg.num_slots,), np.int32)
+        # non-decoding slots get an all--1 block table row so their dummy
+        # writes land on the sink page instead of a prefilling stream's KV
+        bt = np.full_like(self.block_tables, -1)
+        for s in decoding:
+            req = self.slot_req[s]
+            pos[s] = len(req.prompt) + len(req.generated) - 1
+            tokens[s, 0] = req.generated[-1]
+            self._ensure_pages(req, int(pos[s]))
+            bt[s] = self.block_tables[s]
+        logits, self.cache = self._decode_c(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(pos), jnp.asarray(bt))
+        lg = np.asarray(logits)
+        for s in decoding:
+            req = self.slot_req[s]
+            req.generated.append(int(lg[s].argmax()))
+            if self.cfg.record_logits:
+                req.logits.append(lg[s])
+            self._maybe_finish(req)
+        self._decode_ticks += 1
+        self.decode_tick_log.append(self.tick)
+        self._tokens_generated += len(decoding)
+        self._occupancy.append(len(decoding) / cfg.num_slots)
+        active = sum(r is not None for r in self.slot_req)
+        if active:
+            self._resident.append(
+                self.pool.pages_in_use * self.bytes_per_page / active)
+        return True
+
+    def _maybe_finish(self, req: Request) -> None:
+        if len(req.generated) >= req.max_new:
+            self._release(req)
+            req.state = "done"
+            self._log("finish", req.uid)

@@ -219,6 +219,36 @@ def edit_manifest(directory, fn) -> None:
 
 
 # ---------------------------------------------------------------------------
+# serving faults
+# ---------------------------------------------------------------------------
+
+
+def cancel_mid_decode(engine, uid: int, *, after_tokens: int = 2,
+                      max_ticks: int = 10_000):
+    """Drive ``engine`` until drained, cancelling request ``uid`` the
+    moment it has decoded ``after_tokens`` tokens (it must be holding KV
+    pages at that point — asserted). Requests must already be submitted.
+    Returns the engine after every surviving request finished."""
+    cancelled = False
+    ticks = 0
+    while engine.pending():
+        engine.step()
+        ticks += 1
+        if ticks > max_ticks:
+            raise RuntimeError("engine did not drain")
+        req = engine.requests.get(uid)
+        if (not cancelled and req is not None and req.state == "decode"
+                and len(req.generated) >= after_tokens):
+            assert engine.pool.refcount(uid) > 0, "no pages held mid-decode"
+            engine.cancel(uid)
+            cancelled = True
+    if not cancelled:
+        raise AssertionError(
+            f"request {uid} never decoded {after_tokens} tokens")
+    return engine
+
+
+# ---------------------------------------------------------------------------
 # CLI for the CI fault-smoke job
 # ---------------------------------------------------------------------------
 
@@ -302,16 +332,90 @@ def _cli_corruption() -> None:
             raise AssertionError("bit flip went undetected")
 
 
+def _serve_setup():
+    import jax
+    import numpy as np
+
+    from repro.models import get_model
+    from repro.serve_engine import EngineConfig, ServeEngine
+
+    _, model = get_model("brecq_lm_100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(num_slots=3, page_size=4, num_pages=49, max_len=32,
+                        prefill_chunk=8, kv_dtype="float32", backend="xla")
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, model.cfg.vocab, size=n).astype(np.int32)
+               for n in (6, 9, 7)]
+
+    def make():
+        eng = ServeEngine(model, params, ecfg)
+        for uid, p in enumerate(prompts):
+            eng.submit(p, (8, 12, 8)[uid], uid=uid)
+        return eng
+
+    return make
+
+
+def _cli_serve_cancel() -> None:
+    """Cancel a mid-decode stream; its pages must be reclaimed and the
+    surviving streams' outputs must match an uncancelled run exactly."""
+    make = _serve_setup()
+    ref = make()
+    ref.run()
+    eng = cancel_mid_decode(make(), uid=1, after_tokens=3)
+    assert eng.requests[1].state == "cancelled"
+    assert eng.pool.refcount(1) == 0, "cancelled stream leaked pages"
+    eng.assert_no_leaks()
+    for uid in (0, 2):
+        assert eng.requests[uid].generated == ref.requests[uid].generated, uid
+    print("serve-cancel: pages reclaimed, surviving streams unchanged "
+          f"({[len(eng.requests[u].generated) for u in (0, 2)]} tokens)")
+
+
+def _cli_serve_corrupt() -> None:
+    """Bit-flip a saved artifact; engine start must raise the typed
+    ArtifactCorruptionError before any slot is admitted."""
+    import tempfile
+
+    import jax
+
+    from repro.deploy import ArtifactCorruptionError, rtn_artifact
+    from repro.models import get_model
+    from repro.serve_engine import ServeEngine
+
+    cfg, model = get_model("brecq_lm_100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    art = rtn_artifact(params, 4, cfg=cfg)
+    with tempfile.TemporaryDirectory() as d:
+        art.save(d)
+        eng = ServeEngine.from_artifact(d, reduced=True)  # pristine: builds
+        assert not eng.pending()
+        leaf = next(k for k in art.manifest["checksums"] if k.endswith("/w"))
+        flip_leaf_bit(d, leaf)
+        try:
+            ServeEngine.from_artifact(d, reduced=True)
+        except ArtifactCorruptionError as e:
+            print(f"serve-corrupt: engine start rejected damaged artifact "
+                  f"(leaf {e.leaf!r}) before admitting any request")
+        else:
+            raise AssertionError("corrupt artifact started serving")
+
+
 def main(argv=None) -> None:
     import argparse
 
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("command", choices=["kill-resume", "corruption"])
+    p.add_argument("command", choices=["kill-resume", "corruption",
+                                       "serve-cancel", "serve-corrupt"])
     args = p.parse_args(argv)
     if args.command == "kill-resume":
         _cli_kill_resume()
-    else:
+    elif args.command == "corruption":
         _cli_corruption()
+    elif args.command == "serve-cancel":
+        _cli_serve_cancel()
+    else:
+        _cli_serve_corrupt()
 
 
 if __name__ == "__main__":

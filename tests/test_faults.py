@@ -263,3 +263,50 @@ def test_no_verify_loads_corrupt_artifact(saved_artifact):
     faults.flip_leaf_bit(d, leaf)
     loaded = QuantizedArtifact.load(d, verify=False)
     assert loaded.params is not None
+
+
+# ---------------------------------------------------------------------------
+# serving faults: mid-decode cancel, corrupt artifact at engine start
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_mid_decode_reclaims_and_isolates():
+    """Cancelling a decoding stream frees its pages immediately and
+    leaves every other stream's output bit-identical to an uncancelled
+    run (fp KV, same compiled programs -> exact)."""
+    make = faults._serve_setup()
+    ref = make()
+    ref.run()
+    eng = faults.cancel_mid_decode(make(), uid=1, after_tokens=3)
+    assert eng.requests[1].state == "cancelled"
+    assert eng.pool.refcount(1) == 0
+    assert len(eng.requests[1].generated) < 12  # actually cut short
+    for uid in (0, 2):
+        assert eng.requests[uid].state == "done"
+        assert eng.requests[uid].generated == ref.requests[uid].generated
+    eng.assert_no_leaks()
+    # cancel of an already-finished request is a no-op
+    assert not eng.cancel(1)
+    assert not eng.cancel(0)
+
+
+def test_corrupt_artifact_fails_before_admission(tmp_path):
+    """A checksum failure at engine start raises the typed error from
+    the verifying load — no engine exists, so no slot was admitted."""
+    from repro.models import get_model
+    from repro.serve_engine import ServeEngine
+
+    cfg, model = get_model("brecq_lm_100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    art = rtn_artifact(params, 4, cfg=cfg)
+    d = str(tmp_path / "art")
+    art.save(d)
+    # pristine artifact builds an engine with manifest KV defaults
+    eng = ServeEngine.from_artifact(d, reduced=True)
+    assert eng.cfg.kv_dtype == art.manifest["kv_dtype"]
+    assert eng.cfg.page_size == art.manifest["kv_page_size"]
+    leaf = next(k for k in art.manifest["checksums"] if k.endswith("/w"))
+    faults.flip_leaf_bit(d, leaf)
+    with pytest.raises(ArtifactCorruptionError) as ei:
+        ServeEngine.from_artifact(d, reduced=True)
+    assert ei.value.leaf == leaf

@@ -1,0 +1,211 @@
+"""Property tests: paged KV cache handle + int8 kvattn vs dense reference.
+
+The paged cache's one load-bearing claim is the *identity layout*: after
+appending a stream's tokens through an arbitrarily permuted block table,
+the gathered per-stream view holds token t at row t — so paged attention
+over any physical page assignment equals dense attention over the same
+values. Hypothesis drives that across page sizes, GQA group counts,
+sliding windows, ragged per-stream lengths, and page reuse after free.
+"""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.serve_engine import PagePool
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def paged_case(draw):
+    ps = draw(st.sampled_from([1, 2, 4, 8]))
+    B = draw(st.integers(1, 3))
+    K = draw(st.sampled_from([1, 2]))
+    G = draw(st.sampled_from([1, 2, 4]))  # H = K * G (GQA groups)
+    hd = draw(st.sampled_from([4, 8]))
+    max_pages = draw(st.integers(2, 4))
+    cap = max_pages * ps
+    lens = [draw(st.integers(1, cap)) for _ in range(B)]
+    window = draw(st.sampled_from([None, max(1, cap // 2)]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return ps, B, K, G, hd, max_pages, lens, window, seed
+
+
+def _build(ps, B, K, hd, max_pages, lens, seed, kv_dtype):
+    """Append each stream's tokens in random-size chunks through a
+    PERMUTED block table; return (cache, bt, dense_k, dense_v)."""
+    rng = np.random.default_rng(seed)
+    num_pages = 1 + B * max_pages
+    cache = cm.init_paged_kv(num_pages, ps, K, hd, kv_dtype)
+    perm = rng.permutation(np.arange(1, num_pages))
+    bt = np.full((B, max_pages), -1, np.int32)
+    cap = max_pages * ps
+    k = rng.normal(size=(B, cap, K, hd)).astype(np.float32)
+    v = rng.normal(size=(B, cap, K, hd)).astype(np.float32)
+    pi = 0
+    for b in range(B):
+        n_pages = -(-lens[b] // ps)
+        bt[b, :n_pages] = perm[pi:pi + n_pages]
+        pi += n_pages
+    btj = jnp.asarray(bt)
+    for b in range(B):
+        t = 0
+        while t < lens[b]:
+            c = int(rng.integers(1, lens[b] - t + 1))
+            # single-stream append: other rows write to the sink via -1
+            bt1 = np.full_like(bt, -1)
+            bt1[b] = bt[b]
+            pos = np.zeros((B, c), np.int32)
+            pos[b] = np.arange(t, t + c)
+            cache = cm.paged_append(
+                cache, jnp.asarray(np.broadcast_to(k[:, t:t + c], (B, c, K, hd))),
+                jnp.asarray(np.broadcast_to(v[:, t:t + c], (B, c, K, hd))),
+                jnp.asarray(bt1), jnp.asarray(pos), ps)
+            t += c
+    return cache, btj, k, v
+
+
+@settings(**SET)
+@given(paged_case())
+def test_append_gather_roundtrip_fp(case):
+    """fp32 pools: gathered view row t == appended token t, bit-exact,
+    for any page permutation and ragged lengths; kpos marks exactly the
+    allocated rows."""
+    ps, B, K, G, hd, MP, lens, window, seed = case
+    cache, bt, k, v = _build(ps, B, K, hd, MP, lens, seed, "float32")
+    gather, kpos = cm.paged_view(cache, bt, ps)
+    gk = np.asarray(gather(cache["k_pages"]))
+    kp = np.asarray(kpos)
+    for b in range(B):
+        np.testing.assert_array_equal(gk[b, :lens[b]], k[b, :lens[b]])
+        n_alloc = -(-lens[b] // ps) * ps
+        assert (kp[b, :n_alloc] == np.arange(n_alloc)).all()
+        assert (kp[b, n_alloc:] == -1).all()
+
+
+@settings(**SET)
+@given(paged_case())
+def test_paged_attend_matches_dense_fp(case):
+    """fp32 paged attention == dense decode_attend over the same values
+    (windowed and global), at every stream's own ragged length."""
+    ps, B, K, G, hd, MP, lens, window, seed = case
+    cache, bt, k, v = _build(ps, B, K, hd, MP, lens, seed, "float32")
+    rng = np.random.default_rng(seed + 1)
+    H = K * G
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    pos = jnp.asarray([[l - 1] for l in lens], jnp.int32)
+    out = cm.paged_attend(q, cache, bt, pos, ps, window=window, backend="xla")
+    cap = MP * ps
+    kpos = jnp.broadcast_to(jnp.arange(cap), (B, cap))
+    ref = cm.decode_attend(q, jnp.asarray(k), jnp.asarray(v), kpos, pos,
+                           window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(**SET)
+@given(paged_case())
+def test_paged_attend_int8_vs_dense_fp(case):
+    """int8 paged attention through kvattn tracks the dense fp reference
+    within quantization tolerance, and matches attend_int8 over the
+    dense-quantized values exactly (identity layout)."""
+    from repro.kernels.kvattn.ops import attend_int8, quantize_kv
+
+    ps, B, K, G, hd, MP, lens, window, seed = case
+    cache, bt, k, v = _build(ps, B, K, hd, MP, lens, seed, "int8")
+    rng = np.random.default_rng(seed + 1)
+    H = K * G
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    pos = jnp.asarray([[l - 1] for l in lens], jnp.int32)
+    out = cm.paged_attend(q, cache, bt, pos, ps, window=window, backend="xla")
+
+    cap = MP * ps
+    kpos = jnp.broadcast_to(jnp.arange(cap), (B, cap))
+    fp = cm.decode_attend(q, jnp.asarray(k), jnp.asarray(v), kpos, pos,
+                          window=window)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(fp[:, 0]),
+                               atol=0.12)
+
+    # exactness vs the same kernel on densely-stored quantized KV: the
+    # paged pool must be a pure relayout (f16 scale storage included)
+    k8, v8, ks, vs = quantize_kv(jnp.asarray(k), jnp.asarray(v))
+    ks = ks.astype(jnp.float16).astype(jnp.float32)
+    vs = vs.astype(jnp.float16).astype(jnp.float32)
+    # mask rows past each stream's length like the paged kpos does
+    kp = np.asarray(jnp.broadcast_to(jnp.arange(cap), (B, cap))).copy()
+    for b in range(B):
+        n_alloc = -(-lens[b] // ps) * ps
+        kp[b, n_alloc:] = -1
+    ref8 = attend_int8(q[:, 0], k8, v8, ks, vs, jnp.asarray(kp), pos[:, 0],
+                       window=window, backend="xla")
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), np.asarray(ref8))
+
+
+@settings(**SET)
+@given(paged_case())
+def test_page_reuse_after_free(case):
+    """Evict/reuse round-trip: stream A's pages freed and handed to
+    stream B; B's view must equal B's data exactly (no stale rows)."""
+    ps, B, K, G, hd, MP, lens, window, seed = case
+    cache, bt, k, v = _build(ps, B, K, hd, MP, lens, seed, "float32")
+    rng = np.random.default_rng(seed + 2)
+    # stream 0 "freed": reuse its exact pages for new data, same slot
+    n_pages = -(-lens[0] // ps)
+    k2 = rng.normal(size=(1, lens[0], K, hd)).astype(np.float32)
+    v2 = rng.normal(size=(1, lens[0], K, hd)).astype(np.float32)
+    bt1 = np.full((B, MP), -1, np.int32)
+    bt1[0] = np.asarray(bt)[0]
+    pos = np.zeros((B, lens[0]), np.int32)
+    pos[0] = np.arange(lens[0])
+    cache = cm.paged_append(
+        cache, jnp.asarray(np.broadcast_to(k2, (B, lens[0], K, hd))),
+        jnp.asarray(np.broadcast_to(v2, (B, lens[0], K, hd))),
+        jnp.asarray(bt1), jnp.asarray(pos), ps)
+    gather, _ = cm.paged_view(cache, jnp.asarray(bt1), ps)
+    gk = np.asarray(gather(cache["k_pages"]))
+    gv = np.asarray(gather(cache["v_pages"]))
+    np.testing.assert_array_equal(gk[0, :lens[0]], k2[0])
+    np.testing.assert_array_equal(gv[0, :lens[0]], v2[0])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 40), st.lists(st.integers(0, 5), max_size=60),
+       st.integers(0, 2**31 - 1))
+def test_page_pool_conservation(num_pages, ops, seed):
+    """Allocator invariants under random reserve/alloc/free sequences:
+    pages conserved, never double-allocated, page 0 never handed out,
+    and full teardown restores the pristine pool."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages)
+    live: set = set()
+    uid = 0
+    for op in ops:
+        if op <= 2:  # reserve a new owner
+            n = int(rng.integers(1, 4))
+            if pool.can_reserve(n):
+                pool.reserve(uid, n)
+                live.add(uid)
+                uid += 1
+        elif op == 3 and live:  # alloc against a random owner
+            o = sorted(live)[int(rng.integers(len(live)))]
+            if pool._reserved.get(o, 0) > 0:
+                page = pool.alloc(o)
+                assert page != 0
+        elif op == 4 and live:  # free an owner
+            o = sorted(live)[int(rng.integers(len(live)))]
+            pool.free_owner(o)
+            live.discard(o)
+        # conservation + no double allocation, every step
+        allocated = [p for o in live for p in pool.owned(o)]
+        assert len(allocated) == len(set(allocated))
+        assert pool.free_pages + pool.pages_in_use == num_pages - 1
+        assert pool.reserved_pages <= pool.free_pages
+    for o in list(live):
+        pool.free_owner(o)
+    pool.check_no_leaks()
