@@ -1,0 +1,201 @@
+"""Table 8: the budget frontier — exact solver vs unified precision vs GA.
+
+The deployment claim behind `repro.deploy.budget`: give the solver any
+model-bytes budget and the artifact it ships is at least as good as
+every unified-precision artifact that fits the same budget — while the
+genetic search (paper Algorithm 2) never beats it under the identical
+constraint. Sweeps budgets anchored at the unified W2/W4/W8 artifact
+sizes (plus midpoints, where unified precision has no point at all and
+mixed precision is the only occupant), packs each chosen assignment into
+a real artifact, and measures its decode throughput through the serving
+harness; a decode-latency sweep against the *measured* per-layer cost
+table rides along.
+
+Writes ``BENCH_budget.json`` at the repo root — tracked in git, guarded
+by ``scripts/check_budget_bench.py`` in the CI budget-smoke job:
+  * every swept budget: ``solver.artifact_bytes <= budget``,
+  * every unified point fitting the budget has predicted loss >= the
+    solver's (so the solver Pareto-dominates each in-budget unified
+    point of equal or larger size),
+  * the GA cross-check — run on the group-reduced problem so both
+    searchers face the storage-stack tie — never achieves a lower
+    predicted loss.
+
+Model: the reduced serve config (same as table6's serve bench) with the
+calibration-free RTN weight-error sensitivity proxy by default, so the
+bench runs from a clean checkout in seconds; ``--sens PATH`` swaps in a
+measured ``SensTable`` JSON (``core.sensitivity.SensTable.save``) for
+paper-grade predicted losses — the frontier logic is identical.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mixed_precision import GAConfig, fitness, genetic_search
+from repro.core.sensitivity import SensTable
+from repro.deploy.budget import (budget_artifact, bytes_cost_table,
+                                 grouped_problem, measure_cost_table,
+                                 rtn_mixed_artifact, storage_groups,
+                                 weight_sens_table)
+from repro.launch.serve import run_prefill_decode
+from repro.models import get_model
+
+BUDGET_JSON = Path(__file__).resolve().parents[1] / "BENCH_budget.json"
+
+ARCH, BATCH, PROMPT, GEN = "brecq_lm_100m", 8, 64, 16
+
+
+def _decode_tok_s(model, art, *, batch=BATCH, prompt=PROMPT, gen=GEN,
+                  reps=2) -> dict:
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, model.cfg.vocab, (batch, prompt)))
+    runs = []
+    for _ in range(reps):
+        _, s = run_prefill_decode(model, art.params, {"tokens": toks},
+                                  batch_size=batch, prompt_len=prompt,
+                                  gen_len=gen, hook=art.hook(), quiet=True)
+        runs.append(s)
+    best = max(runs, key=lambda s: s["tok_s"])
+    return {"decode_tok_s": round(best["tok_s"], 1),
+            "qmm_tiers": best["qmm_tiers"]}
+
+
+def main(argv=None) -> dict:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="3-point sweep, 1 serving rep, tiny GA — the CI "
+                        "budget-smoke configuration")
+    p.add_argument("--sens", default=None,
+                   help="measured SensTable JSON; default: RTN weight-error "
+                        "proxy (calibration-free)")
+    p.add_argument("--out", default=str(BUDGET_JSON))
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg, model = get_model(ARCH, reduced=True)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    if args.sens:
+        sens = SensTable.load(args.sens)
+        sens_source = args.sens
+    else:
+        sens = weight_sens_table(params, cfg.n_layers)
+        sens_source = "rtn_weight_proxy"
+    groups = storage_groups(sens.shapes)
+    table = bytes_cost_table(sens.shapes)
+    # the GA has no group support — cross-check it on the group-reduced
+    # problem so it searches the same space the artifact can ship
+    # (an untied GA reports per-layer splits container promotion erases)
+    gsens, gtable, _ = grouped_problem(sens, table, groups)
+    reps = 1 if args.smoke else 2
+    ga = GAConfig(pop_size=24, iters=8 if args.smoke else 40, seed=args.seed)
+
+    # unified-precision reference points, through the same artifact path
+    unified = {}
+    for b in (2, 4, 8):
+        art = rtn_mixed_artifact(params, {q: b for q in sens.shapes}, cfg=cfg)
+        unified[b] = {
+            "bits": b, "artifact_bytes": art.nbytes(),
+            "predicted_loss": fitness(sens, {q: b for q in sens.shapes}),
+            **_decode_tok_s(model, art, reps=reps),
+        }
+        print(f"[unified W{b}] {art.nbytes()} bytes, predicted-loss "
+              f"{unified[b]['predicted_loss']:.4g}, "
+              f"{unified[b]['decode_tok_s']} tok/s decode")
+
+    u2, u4, u8 = (unified[b]["artifact_bytes"] for b in (2, 4, 8))
+    budgets = ([u2, (u4 + u8) // 2, u8] if args.smoke
+               else [u2, (u2 + u4) // 2, u4, (u4 + u8) // 2, u8])
+
+    rows = []
+    for budget in budgets:
+        t0 = time.time()
+        art, sol, _ = budget_artifact(params, sens, budget, kind="bytes",
+                                      cfg=cfg)
+        solve_s = time.time() - t0
+        overhead = art.manifest["budget"]["overhead_bytes"]
+        t0 = time.time()
+        _, ga_info = genetic_search(gsens, gtable, budget - overhead, ga)
+        ga_s = time.time() - t0
+        row = {
+            "budget_bytes": budget,
+            "solver": {"predicted_loss": sol.predicted_loss,
+                       "artifact_bytes": art.nbytes(),
+                       "bits_histogram": art.manifest["budget"]["bits_histogram"],
+                       "n_frontier": sol.n_frontier,
+                       "solve_wall_s": round(solve_s, 3),
+                       **_decode_tok_s(model, art, reps=reps)},
+            "genetic": {"fitness": ga_info["fitness"],
+                        "cost": ga_info["cost"],
+                        "wall_s": round(ga_s, 3)},
+            "dominates_unified": sorted(
+                b for b, u in unified.items()
+                if u["artifact_bytes"] <= budget
+                and sol.predicted_loss <= u["predicted_loss"] + 1e-12
+                and art.nbytes() <= u["artifact_bytes"]),
+        }
+        rows.append(row)
+        print(f"[budget {budget}] solver loss {sol.predicted_loss:.4g} "
+              f"({art.nbytes()} bytes, {row['solver']['decode_tok_s']} tok/s) "
+              f"vs GA {ga_info['fitness']:.4g}; dominates unified "
+              f"{row['dominates_unified']}")
+
+    # decode-latency sweep against the measured per-layer tier costs —
+    # the constraint the analytic roofline gets wrong on this backend
+    mtable = measure_cost_table(sens.shapes, m=min(BATCH, 8),
+                                inner=4 if args.smoke else 8, reps=reps)
+    gsens_m, gmtable, _ = grouped_problem(sens, mtable, groups)
+    ms_uniform = {b: mtable.assign_cost({q: b for q in sens.shapes})
+                  for b in (2, 4, 8)}
+    ms_min = sum(min(mtable.cost(q, b) for b in (2, 4, 8))
+                 for q in sens.shapes)
+    # sweep from the cheapest assignment to the slowest uniform point —
+    # [ms_min, ms8] alone collapses on backends where 8-bit is fastest
+    ms_max = max(ms_uniform.values())
+    lat_rows = []
+    for frac in ([0.5] if args.smoke else [0.25, 0.5, 1.0]):
+        budget_ms = ms_min + frac * (ms_max - ms_min)
+        art, sol, _ = budget_artifact(params, sens, budget_ms,
+                                      kind="decode_ms", cfg=cfg,
+                                      cost_table=mtable)
+        _, ga_info = genetic_search(gsens_m, gmtable, budget_ms, ga)
+        lat_rows.append({
+            "budget_decode_ms": round(budget_ms, 4),
+            "solver": {"predicted_loss": sol.predicted_loss,
+                       "cost_ms": round(sol.cost, 4),
+                       "artifact_bytes": art.nbytes(),
+                       "bits_histogram": art.manifest["budget"]["bits_histogram"],
+                       **_decode_tok_s(model, art, reps=reps)},
+            "genetic": {"fitness": ga_info["fitness"],
+                        "cost_ms": round(ga_info["cost"], 4)},
+        })
+        print(f"[budget {budget_ms:.4f}ms] solver loss "
+              f"{sol.predicted_loss:.4g} ({sol.cost:.4f}ms) vs GA "
+              f"{ga_info['fitness']:.4g} ({ga_info['cost']:.4f}ms)")
+
+    out = {
+        "config": {"arch": ARCH, "reduced": True, "batch": BATCH,
+                   "prompt_len": PROMPT, "gen_len": GEN,
+                   "sens_source": sens_source, "smoke": args.smoke,
+                   "backend": jax.default_backend(),
+                   "n_paths": len(sens.shapes),
+                   "n_groups": len(set(groups.values()))},
+        "unified": [unified[b] for b in (2, 4, 8)],
+        "rows": rows,
+        "latency_rows": lat_rows,
+        "measured_cost_meta": mtable.meta,
+    }
+    Path(args.out).write_text(json.dumps(out, indent=1) + "\n")
+    print(f"budget bench -> {Path(args.out).name}: {len(rows)} byte budgets, "
+          f"{len(lat_rows)} latency budgets")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""CI guard over the tracked budget-frontier benchmark (BENCH_budget.json).
+
+Deterministic checks — these follow from the solver being exact, so a
+failure means the solver, the cost accounting, or the bench harness
+regressed (not runner noise):
+
+  1. every swept byte budget: ``solver.artifact_bytes <= budget_bytes``
+     (the bytes budget is a hard bound on what ships);
+  2. every unified-precision point that fits the budget has predicted
+     loss >= the solver's (the unified assignment is in the solver's
+     feasible set, so the exact solver cannot lose to it) — together
+     with (1) this means the solver Pareto-dominates every unified
+     point of equal or larger size that fits the budget;
+  3. the genetic cross-check never achieves a lower predicted loss than
+     the exact solver under the same constraint (byte and latency rows).
+
+One loose measured check (``--min-tok-ratio``, default 0.5): a solver
+artifact must not decode slower than half the slowest unified point —
+a tripwire for pathological dispatch/packing, wide enough for CI noise.
+
+Exit 0 = pass. Run from the repo root:
+
+    python scripts/check_budget_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+MIN_TOK_RATIO = 0.5
+EPS = 1e-9
+
+
+def fail(msg: str) -> None:
+    print(f"check_budget_bench: FAIL — {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(path: Path, min_tok_ratio: float) -> None:
+    doc = json.loads(path.read_text())
+    for key in ("config", "unified", "rows", "latency_rows"):
+        if key not in doc:
+            fail(f"{path.name} is missing '{key}' — re-run "
+                 f"benchmarks/table8_budget.py")
+    unified = {u["bits"]: u for u in doc["unified"]}
+    if not doc["rows"]:
+        fail(f"{path.name} has no swept byte budgets")
+
+    slowest_unified = min(u["decode_tok_s"] for u in unified.values())
+    for row in doc["rows"]:
+        budget, sol = row["budget_bytes"], row["solver"]
+        if sol["artifact_bytes"] > budget:
+            fail(f"budget {budget}: solver artifact is "
+                 f"{sol['artifact_bytes']} bytes — exceeds the budget. "
+                 f"Byte accounting (overhead/probe) has drifted.")
+        for b, u in sorted(unified.items()):
+            if u["artifact_bytes"] > budget:
+                continue  # unified point does not fit this budget
+            loss_eps = EPS * max(1.0, abs(u["predicted_loss"]))
+            if sol["predicted_loss"] > u["predicted_loss"] + loss_eps:
+                fail(f"budget {budget}: solver predicted loss "
+                     f"{sol['predicted_loss']:.6g} is worse than unified "
+                     f"W{b} ({u['predicted_loss']:.6g}) which fits the "
+                     f"budget — the exact solver cannot legally lose; "
+                     f"solver or fitness regression.")
+        if sol["decode_tok_s"] < min_tok_ratio * slowest_unified:
+            fail(f"budget {budget}: solver artifact decodes at "
+                 f"{sol['decode_tok_s']} tok/s, under {min_tok_ratio}x the "
+                 f"slowest unified point ({slowest_unified}) — dispatch or "
+                 f"packing is pathological.")
+
+    for row in doc["rows"] + doc["latency_rows"]:
+        sol, ga = row["solver"], row["genetic"]
+        loss_eps = EPS * max(1.0, abs(sol["predicted_loss"]))
+        if ga["fitness"] + loss_eps < sol["predicted_loss"]:
+            tag = row.get("budget_bytes", row.get("budget_decode_ms"))
+            fail(f"budget {tag}: the genetic search found predicted loss "
+                 f"{ga['fitness']:.6g}, beating the 'exact' solver "
+                 f"({sol['predicted_loss']:.6g}) — the solver is not "
+                 f"optimal; check component enumeration/groups.")
+    print(f"check_budget_bench: OK — {len(doc['rows'])} byte budgets, "
+          f"{len(doc['latency_rows'])} latency budgets; solver dominates "
+          f"all in-budget unified points, GA never wins")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=Path, default=ROOT / "BENCH_budget.json")
+    ap.add_argument("--min-tok-ratio", type=float, default=MIN_TOK_RATIO)
+    ap.add_argument("--require", action="store_true",
+                    help="fail if the bench file is absent (CI smoke sets "
+                         "this after regenerating it)")
+    args = ap.parse_args()
+    if not args.budget.exists():
+        if args.require:
+            fail(f"{args.budget} is missing — run "
+                 f"benchmarks/table8_budget.py first")
+        print(f"check_budget_bench: SKIP — {args.budget.name} not present")
+        return
+    check(args.budget, args.min_tok_ratio)
+
+
+if __name__ == "__main__":
+    main()

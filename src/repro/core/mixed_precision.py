@@ -32,11 +32,19 @@ class TPUCostModel:
     before the matmul); the win is the weight-streaming memory term,
     which scales linearly with bits — exactly the behaviour of the
     qmatmul kernel. int8 activations double MXU throughput.
+
+    ``layer_cost_fn`` swaps the roofline for an injected per-layer cost
+    ``(path, shape, w_bits) -> seconds`` — e.g. measured kernel timings
+    (``repro.deploy.budget.cost.measure_cost_table``) — so the same
+    search can run under analytic or measured constraints; fig2 reports
+    both, and BENCH_serve.json shows why the difference matters
+    (the roofline's decode-tier assumption loses on CPU).
     """
 
     peak_flops_bf16: float = 197e12
     hbm_bw: float = 819e9
     tokens_per_step: int = 1024  # batch x seq of the serving shape
+    layer_cost_fn: Optional[Callable[[str, tuple, int], float]] = None
 
     def layer_latency_s(self, shape: tuple, w_bits: int, a_bits: int = 16) -> float:
         *lead, k, n = shape
@@ -51,6 +59,9 @@ class TPUCostModel:
 
     def model_latency_s(self, shapes: dict[str, tuple], bits: dict[str, int],
                         a_bits: int = 16) -> float:
+        if self.layer_cost_fn is not None:
+            return sum(self.layer_cost_fn(p, shapes[p], bits[p])
+                       for p in shapes)
         return sum(self.layer_latency_s(shapes[p], bits[p], a_bits) for p in shapes)
 
 
@@ -90,10 +101,27 @@ class GAConfig:
 
 def genetic_search(sens: SensTable, cost_fn: Callable[[dict[str, int]], float],
                    delta: float, ga: GAConfig = GAConfig()) -> tuple[dict[str, int], dict]:
-    """Search argmin fitness s.t. cost_fn(assign) <= delta."""
+    """Search argmin fitness s.t. cost_fn(assign) <= delta.
+
+    ``cost_fn`` is a whole-assignment cost; a per-layer
+    ``deploy.budget.CostTable`` may be passed directly (its
+    ``assign_cost`` is used), so the GA and the exact solver run under
+    identical constraints when cross-checked. With a per-layer table the
+    infeasibility fallback is the true cheapest assignment — measured
+    cost tables are not monotone in bits (on CPU 2-bit unpack overhead
+    makes W2 *slower* than W8), so the historical all-2-bit fallback can
+    be infeasible when cheaper points exist."""
+    per_layer = cost_fn if hasattr(cost_fn, "assign_cost") else None
+    cost_fn = getattr(cost_fn, "assign_cost", cost_fn)
     paths = sorted(sens.shapes.keys())
     n = len(paths)
     rng = np.random.default_rng(ga.seed)
+    if per_layer is None:
+        cheapest = np.zeros(n, np.int64)  # all 2-bit
+    else:
+        cheapest = np.array([min(range(len(BIT_CHOICES)), key=lambda i:
+                                 per_layer.cost(p, BIT_CHOICES[i]))
+                             for p in paths], np.int64)
 
     def to_assign(vec: np.ndarray) -> dict[str, int]:
         return {p: BIT_CHOICES[v] for p, v in zip(paths, vec)}
@@ -112,9 +140,10 @@ def genetic_search(sens: SensTable, cost_fn: Callable[[dict[str, int]], float],
     while len(pop) < ga.pop_size and tries < ga.max_tries * ga.pop_size:
         v = random_vec()
         if not feasible(v):
-            v = np.zeros(n, np.int64)  # all 2-bit: cheapest point
+            v = cheapest.copy()
             if not feasible(v):
-                raise ValueError("delta infeasible even at all-2-bit")
+                raise ValueError("delta infeasible even at the cheapest "
+                                 "assignment")
         pop.append(v)
         tries += 1
 

@@ -36,6 +36,37 @@ class SensTable:
     block_of: dict[str, int]  # path -> block index
     shapes: dict[str, tuple]  # path -> weight shape
 
+    # -- persistence: measuring needs three calibrations + per-layer
+    # probes, so fig2 / the budget solver tabulate once and reload ------------
+
+    def to_json(self) -> dict:
+        return {"diag": [[p, b, v] for (p, b), v in sorted(self.diag.items())],
+                "offdiag": [[p1, p2, v] for (p1, p2), v
+                            in sorted(self.offdiag.items())],
+                "block_of": dict(self.block_of),
+                "shapes": {p: list(s) for p, s in self.shapes.items()}}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "SensTable":
+        return cls(
+            diag={(p, int(b)): float(v) for p, b, v in doc["diag"]},
+            offdiag={(p1, p2): float(v) for p1, p2, v in doc["offdiag"]},
+            block_of={p: int(b) for p, b in doc["block_of"].items()},
+            shapes={p: tuple(s) for p, s in doc["shapes"].items()})
+
+    def save(self, path: str) -> None:
+        import json
+
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "SensTable":
+        import json
+
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
 
 class _SelectHook(QuantHook):
     """Hard-quantize only the selected paths, using calibrated rounding."""

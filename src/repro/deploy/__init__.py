@@ -10,12 +10,17 @@ Public API:
   * Integrity: :data:`ARTIFACT_SCHEMA_VERSION`, :func:`leaf_crc32` /
     :func:`tree_checksums` / :func:`content_digest`, and the typed load
     errors (:class:`ArtifactError` base; schema / corruption / mismatch).
+  * :mod:`.budget` — budgeted mixed precision: :func:`solve_budget` over
+    measured/bytes cost tables, :func:`budget_artifact` (budget in,
+    servable artifact out), measured qmm dispatch (``docs/budget.md``).
 """
 from .artifact import (ARTIFACT_SCHEMA_VERSION,  # noqa: F401
                        ArtifactCorruptionError, ArtifactError,
                        ArtifactMismatchError, ArtifactSchemaError,
                        QuantizedArtifact, export, rtn_artifact)
+from .budget import (budget_artifact, rtn_mixed_artifact,  # noqa: F401
+                     solve_budget)
 from .pack import (code_layout, container_bits, content_digest,  # noqa: F401
                    dequant_leaf, leaf_crc32, pack_codes, quantize_tree,
-                   rtn_bits_by_path, rtn_pack_leaf, tree_bytes,
+                   rtn_bits_by_path, rtn_codes, rtn_pack_leaf, tree_bytes,
                    tree_checksums)

@@ -107,14 +107,16 @@ def dequant_leaf(wp: Array, qscale: Array, k: int) -> Array:
     return w.reshape(*codes.shape)
 
 
-def rtn_pack_leaf(w: Array, bits: int, group: Optional[int] = None
-                  ) -> tuple[Array, Array]:
-    """Symmetric minmax RTN -> (packed codes, scales) for one leaf.
+def rtn_codes(w: Array, bits: int, group: Optional[int] = None
+              ) -> tuple[Array, Array]:
+    """Symmetric minmax RTN -> (unpacked int8 codes, scales) for one leaf.
 
     w: (…, K, N). Scales are per-(group, out-channel); ``group`` falls
     back to per-channel (one group spanning K) when it does not divide K.
-    Returns packed (…, K*cbits/8, N) int8 and qscale (…, G, N) f32.
-    """
+    Returns codes (…, K, N) int8 in the ``bits``-wide range and qscale
+    (…, G, N) f32. The mixed-precision stacking path (``deploy.budget``)
+    consumes the unpacked codes so layers quantized at different widths
+    can share one promoted container."""
     k, n = w.shape[-2], w.shape[-1]
     g = group if (group and k % group == 0) else k
     qmax = 2 ** (bits - 1) - 1
@@ -122,8 +124,17 @@ def rtn_pack_leaf(w: Array, bits: int, group: Optional[int] = None
     amax = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)
     scale = jnp.maximum(amax / qmax, 1e-8)
     codes = jnp.clip(jnp.round(wg / scale), -(2 ** (bits - 1)), qmax)
-    codes = codes.reshape(w.shape).astype(jnp.int8)
-    return pack_codes(codes, k, bits), scale.squeeze(-2)
+    return codes.reshape(w.shape).astype(jnp.int8), scale.squeeze(-2)
+
+
+def rtn_pack_leaf(w: Array, bits: int, group: Optional[int] = None
+                  ) -> tuple[Array, Array]:
+    """:func:`rtn_codes` + :func:`pack_codes`: (packed codes, scales).
+
+    Returns packed (…, K*cbits/8, N) int8 and qscale (…, G, N) f32.
+    """
+    codes, scales = rtn_codes(w, bits, group)
+    return pack_codes(codes, w.shape[-2], bits), scales
 
 
 def _leaf_plan(node: dict, keypath: tuple, bits: int):

@@ -16,6 +16,12 @@ execution tiers by shape alone — callers (``QuantHook.packed_matmul``,
 On CPU each tier runs its XLA reference (the Pallas kernels are
 exercised in interpret mode by tests); on TPU the Pallas kernels
 compile. ``backend`` / ``QuantHook.packed_backend`` still forces a path.
+
+Decode-shaped calls can additionally dispatch by *measurement* instead
+of the M-threshold guess: an installed per-shape table of timed tier
+winners (:func:`set_dispatch_table`, built by
+``repro.deploy.budget.cost``) overrides the heuristic — see
+:func:`select_tier` / ``REPRO_QMM_DISPATCH``.
 """
 from __future__ import annotations
 
@@ -64,6 +70,34 @@ def set_decode_tier(enabled: bool | None) -> None:
     already-compiled programs keep the tier they were traced with."""
     global _DECODE_TIER_FORCED
     _DECODE_TIER_FORCED = enabled
+
+
+# Measured dispatch. The M <= DECODE_M_MAX heuristic guesses which tier
+# wins at decode shapes; BENCH_serve.json records it guessing wrong on
+# CPU (decode_ratio_tier_vs_legacy < 1). A measured dispatch table —
+# (K, N, container_bits) -> winning tier, produced by timing each
+# eligible tier at the artifact's actual shapes
+# (repro.deploy.budget.cost.measure_cost_table, installed via
+# install_dispatch) — overrides the guess for the shapes it covers:
+#   env   REPRO_QMM_DISPATCH=heuristic|measured  (forces the mode)
+#   auto  (default): measured iff a table is installed
+_DISPATCH_TABLE: dict[tuple[int, int, int], str] | None = None
+
+
+def set_dispatch_table(table: dict[tuple[int, int, int], str] | None) -> None:
+    """Install (or clear) the measured dispatch table. Takes effect at
+    the next trace, like :func:`set_decode_tier`."""
+    global _DISPATCH_TABLE
+    _DISPATCH_TABLE = table
+
+
+def dispatch_mode() -> str:
+    """Resolved dispatch mode: the ``REPRO_QMM_DISPATCH`` env override
+    when set, else ``'measured'`` iff a table is installed."""
+    mode = os.environ.get("REPRO_QMM_DISPATCH", "auto").lower()
+    if mode in ("heuristic", "measured"):
+        return mode
+    return "measured" if _DISPATCH_TABLE else "heuristic"
 
 # Trace-time tier counters (reset with ``reset_tier_counts``): each jit
 # trace that routes through qmm bumps its tier once, so tests and the
@@ -139,14 +173,23 @@ def from_node(node, k: int, path: str | None = None) -> QuantizedLinear:
 
 def select_tier(m: int, qw: QuantizedLinear) -> str:
     """Execution tier for ``m`` activation rows against ``qw`` — the one
-    dispatch predicate, shared by :func:`qmm` and its tests. Honors the
-    decode-tier opt-out (:func:`set_decode_tier` /
-    ``REPRO_QMM_DECODE_TIER``)."""
+    dispatch predicate, shared by :func:`qmm` and its tests.
+
+    Decode-shaped 2-D matmuls (``m <= DECODE_M_MAX``) consult the
+    measured dispatch table when the mode resolves to ``'measured'``
+    (:func:`dispatch_mode`); shapes the table does not cover — and the
+    heuristic mode — fall back to the gemv guess. The decode-tier
+    opt-out (:func:`set_decode_tier` / ``REPRO_QMM_DECODE_TIER``)
+    still wins over everything."""
     if qw.packed.ndim == 3:
         return "grouped"
-    if m <= DECODE_M_MAX and decode_tier_enabled():
-        return "decode"
-    return "prefill"
+    if m > DECODE_M_MAX or not decode_tier_enabled():
+        return "prefill"
+    if _DISPATCH_TABLE is not None and dispatch_mode() == "measured":
+        tier = _DISPATCH_TABLE.get((qw.k, qw.packed.shape[-1], qw.bits))
+        if tier is not None:
+            return tier
+    return "decode"
 
 
 def _pad_cols(qw: QuantizedLinear, bn: int) -> tuple[QuantizedLinear, int]:

@@ -43,6 +43,25 @@ def parse_args(argv=None):
     p.add_argument("--quant", type=int, default=None, choices=[2, 4, 8],
                    help="pack weights to this many bits (RTN artifact)")
     p.add_argument("--group", type=int, default=None)
+    p.add_argument("--budget-bytes", type=float, default=None,
+                   help="solve per-layer bits so the whole artifact fits "
+                        "this many bytes, then serve it "
+                        "(repro.deploy.budget)")
+    p.add_argument("--budget-decode-ms", type=float, default=None,
+                   help="solve per-layer bits so the summed measured "
+                        "per-layer decode matmul time fits this many ms, "
+                        "then serve it")
+    p.add_argument("--sens", default=None,
+                   help="SensTable JSON (core.sensitivity.SensTable.save) "
+                        "for --budget-*; default: calibration-free RTN "
+                        "weight-error proxy")
+    p.add_argument("--dispatch", default="auto",
+                   choices=["auto", "heuristic", "measured"],
+                   help="qmm decode-shape tier dispatch: measured times "
+                        "each eligible tier at the served shapes (cached "
+                        "in the artifact manifest per backend) and routes "
+                        "by the winners; heuristic keeps the M<=8 gemv "
+                        "guess; auto = measured iff a table is installed")
     p.add_argument("--artifact", default=None,
                    help="serve from a saved QuantizedArtifact directory")
     p.add_argument("--save-artifact", default=None,
@@ -92,6 +111,63 @@ def _check_manifest(manifest: dict, cfg) -> None:
                 f"n_layers={manifest.get('n_layers')}, "
                 f"d_model={manifest.get('d_model')}, "
                 f"vocab={manifest.get('vocab')})")
+
+
+def _solve_budget_artifact(args, cfg, params):
+    """--budget-bytes/--budget-decode-ms: sensitivity table (measured
+    JSON via --sens, else the RTN weight-error proxy) -> exact solver ->
+    packed mixed-precision artifact. Raises on an infeasible budget."""
+    from ..core.sensitivity import SensTable
+    from ..deploy.budget import budget_artifact, weight_sens_table
+
+    if args.budget_bytes is not None and args.budget_decode_ms is not None:
+        raise SystemExit("pass --budget-bytes or --budget-decode-ms, not both")
+    if args.sens:
+        sens = SensTable.load(args.sens)
+    else:
+        sens = weight_sens_table(params, cfg.n_layers, group=args.group)
+    if args.budget_bytes is not None:
+        kind, budget = "bytes", args.budget_bytes
+    else:
+        kind, budget = "decode_ms", args.budget_decode_ms
+    art, sol, _ = budget_artifact(params, sens, budget, kind=kind, cfg=cfg,
+                                  group=args.group,
+                                  m=min(args.batch, 8) if kind != "bytes" else 1)
+    if kind == "bytes" and art.nbytes() > budget:
+        raise ArtifactMismatchError(
+            f"budget solve produced a {art.nbytes()}-byte artifact over the "
+            f"{budget:g}-byte budget")
+    return art
+
+
+def _setup_dispatch(args, cfg, params, artifact) -> None:
+    """--dispatch: route decode-shaped qmm calls by measured tier
+    winners. 'measured' times the served shapes now (reusing the
+    artifact's per-backend manifest cache when present); 'heuristic'
+    pins the env override so even an installed table is ignored."""
+    import os
+
+    if args.dispatch == "heuristic":
+        os.environ["REPRO_QMM_DISPATCH"] = "heuristic"
+        return
+    if args.dispatch != "measured":
+        return
+    if artifact is None:
+        raise SystemExit("--dispatch measured needs packed weights "
+                         "(--artifact/--quant/--budget-*)")
+    from ..deploy.budget import (ensure_cost_table, install_dispatch,
+                                 weight_shapes)
+
+    os.environ["REPRO_QMM_DISPATCH"] = "measured"
+    table = ensure_cost_table(artifact, weight_shapes(params, cfg.n_layers),
+                              m=min(args.batch, 8))
+    install_dispatch(table)
+    wins = {}
+    for key, tier in table.dispatch.items():
+        wins[tier] = wins.get(tier, 0) + 1
+    print(f"[dispatch] measured tier winners on {table.backend} "
+          f"(m={table.meta['m']}): {wins} over "
+          f"{table.meta['unique_shapes']} shapes")
 
 
 def run_prefill_decode(model, params, batch, *, batch_size: int,
@@ -183,6 +259,21 @@ def main(argv=None, params=None):
             print(f"loaded artifact {args.artifact}: "
                   f"{artifact.nbytes()/1e6:.1f}MB, manifest arch="
                   f"{artifact.manifest.get('arch')}")
+        elif args.budget_bytes is not None or args.budget_decode_ms is not None:
+            art = _solve_budget_artifact(args, cfg, params)
+            if args.save_artifact:
+                out_dir = args.save_artifact
+            else:
+                tmp_dir = tempfile.TemporaryDirectory(prefix="brecq_art_")
+                out_dir = tmp_dir.name
+            art.save(out_dir)
+            artifact = QuantizedArtifact.load(out_dir,
+                                              verify=not args.no_verify)
+            info = artifact.manifest["budget"]
+            print(f"[budget] {info['kind']} <= {info['budget']:g}: solved "
+                  f"bits {info['bits_histogram']} predicted-loss "
+                  f"{info['predicted_loss']:.4g}; artifact_bytes="
+                  f"{artifact.nbytes()} -> {out_dir}")
         elif args.quant is not None:
             art = rtn_artifact(params, args.quant, args.group, cfg=cfg)
             if args.save_artifact:
@@ -196,6 +287,7 @@ def main(argv=None, params=None):
                                               verify=not args.no_verify)
             print(f"packed W{args.quant} artifact in "
                   f"{art.stats['pack_wall_s']:.2f}s -> {out_dir}")
+        _setup_dispatch(args, cfg, params, artifact)
         return _serve(args, cfg, model, params, artifact, fp_bytes)
     finally:
         if tmp_dir is not None:

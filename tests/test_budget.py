@@ -1,0 +1,371 @@
+"""Budgeted mixed-precision deployment: solver optimality, cost tables,
+group reduction, artifact packing, and the serve CLI budget flow.
+
+The load-bearing claim is solver *exactness*: `solve_budget` must match
+full enumeration on every problem it accepts, never exceed the budget,
+and never lose to the genetic search on the same (group-reduced)
+problem. Seeded random problems exercise that always; a hypothesis
+variant widens the net when the optional dep is installed.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mixed_precision import GAConfig, fitness, genetic_search
+from repro.core.sensitivity import SensTable
+from repro.deploy.budget import (BudgetInfeasibleError, CostTable,
+                                 brute_force, budget_artifact,
+                                 bytes_cost_table, ensure_cost_table,
+                                 grouped_problem, install_dispatch,
+                                 measure_cost_table, rtn_mixed_artifact,
+                                 solve_budget, storage_groups,
+                                 weight_sens_table, weight_shapes)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: keep the seeded fuzz, skip the rest
+    HAVE_HYPOTHESIS = False
+
+BITS = (2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# random solver problems (shared by the seeded fuzz and hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def _random_problem(rng, n_max=6):
+    n = int(rng.integers(2, n_max + 1))
+    paths = [f"l{i}" for i in range(n)]
+    block_of = {p: int(rng.integers(0, 2)) for p in paths}
+    diag = {}
+    for p in paths:
+        vals = sorted(rng.uniform(0.0, 10.0, len(BITS)), reverse=True)
+        for b, v in zip(BITS, vals):  # loss decreasing in bits
+            diag[(p, b)] = float(v)
+    offdiag = {}
+    for i in range(n):
+        for j in range(i + 1, n):
+            if block_of[paths[i]] == block_of[paths[j]] and rng.random() < 0.4:
+                offdiag[(paths[i], paths[j])] = float(rng.uniform(-1.0, 2.0))
+    sens = SensTable(diag=diag, offdiag=offdiag, block_of=block_of,
+                     shapes={p: (8, 8) for p in paths})
+    costs = {(p, b): float(rng.uniform(0.1, 1.0)) * b
+             for p in paths for b in BITS}
+    table = CostTable(kind="bytes", backend="test", costs=costs)
+    groups = None
+    if rng.random() < 0.5:  # tie a random subset into two groups
+        groups = {p: f"g{int(rng.integers(0, 2))}" if rng.random() < 0.6
+                  else p for p in paths}
+    lo = sum(min(table.cost(p, b) for b in BITS) for p in paths)
+    hi = sum(max(table.cost(p, b) for b in BITS) for p in paths)
+    budget = float(lo + rng.uniform(0.0, 1.0) * (hi - lo))
+    return sens, table, groups, budget
+
+
+def _check_solver_invariants(sens, table, groups, budget):
+    try:
+        sol = solve_budget(sens, table, budget, groups=groups)
+    except BudgetInfeasibleError:
+        # the random budget fell below the *grouped* floor (ties can
+        # raise the cheapest feasible cost) — enumeration must agree
+        with pytest.raises(BudgetInfeasibleError):
+            brute_force(sens, table, budget, groups=groups)
+        return
+    assert sol.cost <= budget + 1e-9
+    assert sol.predicted_loss == pytest.approx(fitness(sens, sol.assign))
+    # groups respected: tied paths carry identical bits
+    if groups:
+        by_g = {}
+        for p, b in sol.assign.items():
+            by_g.setdefault(groups.get(p, p), set()).add(b)
+        assert all(len(s) == 1 for s in by_g.values())
+    # exactness: full enumeration finds nothing better
+    bf = brute_force(sens, table, budget, groups=groups)
+    assert sol.predicted_loss == pytest.approx(bf.predicted_loss, abs=1e-9)
+    # GA on the identical (group-reduced) problem never wins
+    if groups:
+        gsens, gtable, expand = grouped_problem(sens, table, groups)
+    else:
+        gsens, gtable, expand = sens, table, lambda a: dict(a)
+    assign, info = genetic_search(gsens, gtable, budget,
+                                  GAConfig(pop_size=16, iters=10, seed=0))
+    assert info["fitness"] >= sol.predicted_loss - 1e-9
+    assert fitness(sens, expand(assign)) == pytest.approx(info["fitness"])
+    # lagrange approximation: feasible, never better than exact
+    lag = solve_budget(sens, table, budget, groups=groups, method="lagrange")
+    assert lag.cost <= budget + 1e-9
+    assert lag.predicted_loss >= sol.predicted_loss - 1e-9
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_solver_invariants_seeded(seed):
+    rng = np.random.default_rng(seed)
+    _check_solver_invariants(*_random_problem(rng))
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_solver_invariants_hypothesis(seed):
+        rng = np.random.default_rng(seed)
+        _check_solver_invariants(*_random_problem(rng))
+
+
+def test_infeasible_budget_raises():
+    rng = np.random.default_rng(0)
+    sens, table, groups, _ = _random_problem(rng)
+    floor = sum(min(table.cost(p, b) for b in BITS) for p in sens.shapes)
+    with pytest.raises(BudgetInfeasibleError):
+        solve_budget(sens, table, floor * 0.5, groups=groups)
+
+
+def test_solver_prefers_interactions():
+    """Two coupled 2-bit layers must pay the offdiag term — with a large
+    positive interaction the solver splits them even when the diagonal
+    alone says all-2 is optimal."""
+    paths = ["a", "b"]
+    diag = {(p, b): {2: 1.0, 4: 1.1, 8: 1.2}[b] for p in paths for b in BITS}
+    sens = SensTable(diag=diag, offdiag={("a", "b"): 50.0},
+                     block_of={p: 0 for p in paths},
+                     shapes={p: (4, 4) for p in paths})
+    table = CostTable(kind="bytes", backend="test",
+                      costs={(p, b): float(b) for p in paths for b in BITS})
+    sol = solve_budget(sens, table, budget=6.0)
+    assert sorted(sol.assign.values()) == [2, 4]
+    assert sol.predicted_loss == pytest.approx(2.1)
+
+
+# ---------------------------------------------------------------------------
+# group reduction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_grouped_problem_preserves_fitness_and_cost(seed):
+    rng = np.random.default_rng(100 + seed)
+    sens, table, _, _ = _random_problem(rng)
+    paths = sorted(sens.shapes)
+    groups = {p: f"g{i % 2}" for i, p in enumerate(paths)}
+    gsens, gtable, expand = grouped_problem(sens, table, groups)
+    assert gtable.kind == table.kind
+    for _ in range(10):
+        gassign = {g: int(rng.choice(BITS)) for g in gsens.shapes}
+        full = expand(gassign)
+        assert fitness(gsens, gassign) == pytest.approx(fitness(sens, full))
+        assert gtable.assign_cost(gassign) == pytest.approx(
+            table.assign_cost(full))
+
+
+# ---------------------------------------------------------------------------
+# sensitivity + cost table serialization
+# ---------------------------------------------------------------------------
+
+
+def test_senstable_json_roundtrip(tmp_path):
+    rng = np.random.default_rng(7)
+    sens, _, _, _ = _random_problem(rng)
+    path = tmp_path / "sens.json"
+    sens.save(path)
+    back = SensTable.load(path)
+    assert back.diag == sens.diag
+    assert back.offdiag == sens.offdiag
+    assert back.block_of == sens.block_of
+    assert {p: tuple(s) for p, s in back.shapes.items()} == \
+        {p: tuple(s) for p, s in sens.shapes.items()}
+
+
+def test_costtable_json_roundtrip(tmp_path):
+    table = CostTable(kind="decode_ms", backend="cpu",
+                      costs={("a", 2): 0.5, ("a", 8): 0.25},
+                      tiers={("a", 2): "decode"},
+                      dispatch={"64,128,2": "prefill"},
+                      meta={"m": 1})
+    path = tmp_path / "cost.json"
+    table.save(path)
+    back = CostTable.load(path)
+    assert back == table
+    # and it survives a json.dumps embed (manifest caching path)
+    assert CostTable.from_json(json.loads(json.dumps(table.to_json()))) == table
+
+
+def test_bytes_cost_table_container_aware():
+    """2-bit on a K that 4 does not divide ships in an int8 container —
+    the bytes table must charge container bits, not nominal bits."""
+    table = bytes_cost_table({"even": (64, 16), "ragged": (6, 16)})
+    assert table.cost("even", 2) == 64 * 16 * 2 / 8
+    assert table.cost("ragged", 2) == 6 * 16 * 8 / 8  # promoted to int8
+    assert table.cost("even", 8) == 64 * 16
+    # stacked experts multiply through the lead dims
+    t3 = bytes_cost_table({"moe": (4, 64, 16)})
+    assert t3.cost("moe", 4) == 4 * 64 * 16 * 4 / 8
+
+
+# ---------------------------------------------------------------------------
+# measured cost table + dispatch install
+# ---------------------------------------------------------------------------
+
+
+def test_measured_cost_table_and_dispatch(monkeypatch):
+    import repro.kernels.qmatmul.ops as qmm_ops
+
+    monkeypatch.delenv("REPRO_QMM_DISPATCH", raising=False)
+    shapes = {"a": (64, 32), "b": (64, 32), "c": (2, 32, 16)}
+    table = measure_cost_table(shapes, m=1, inner=2, reps=1)
+    for p in shapes:
+        for b in BITS:
+            assert table.cost(p, b) > 0
+    # identical (shape, container) rows share one measurement
+    assert table.cost("a", 4) == table.cost("b", 4)
+    # grouped stacks time the grouped tier only
+    assert table.tiers[("c", 4)] == "grouped"
+    assert table.meta["m"] == 1
+    # dispatch winners install onto the qmm tier predicate
+    try:
+        install_dispatch(table)
+        assert qmm_ops._DISPATCH_TABLE  # parsed "k,n,cbits" keys
+        assert all(isinstance(k, tuple) and len(k) == 3
+                   for k in qmm_ops._DISPATCH_TABLE)
+        assert qmm_ops.dispatch_mode() == "measured"
+    finally:
+        qmm_ops.set_dispatch_table(None)
+
+
+# ---------------------------------------------------------------------------
+# artifact packing: proxy sensitivity, promotion, budget e2e
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def reduced_lm():
+    from repro.models import get_model
+
+    cfg, model = get_model("brecq_lm_100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_weight_sens_table_proxy(reduced_lm):
+    cfg, model, params = reduced_lm
+    sens = weight_sens_table(params, cfg.n_layers)
+    shapes = weight_shapes(params, cfg.n_layers)
+    assert set(sens.shapes) == set(shapes)
+    assert len(shapes) % cfg.n_layers == 0 and len(shapes) > 0
+    for p in sens.shapes:
+        # RTN error shrinks with bits
+        assert sens.diag[(p, 2)] > sens.diag[(p, 4)] > sens.diag[(p, 8)] >= 0
+    # storage groups tie exactly the per-layer copies of each stack
+    groups = storage_groups(sens.shapes)
+    sizes = {}
+    for g in groups.values():
+        sizes[g] = sizes.get(g, 0) + 1
+    assert set(sizes.values()) == {cfg.n_layers}
+
+
+def test_rtn_mixed_artifact_promotion_and_manifest(reduced_lm, tmp_path):
+    """Mixed bits inside one stack ship in the widest member's container;
+    the manifest still records true per-layer widths and the histogram
+    matches them after a save/load round trip."""
+    from repro.deploy import QuantizedArtifact
+
+    cfg, model, params = reduced_lm
+    shapes = weight_shapes(params, cfg.n_layers)
+    assign = {p: 2 for p in shapes}
+    stack = sorted({p for p in shapes if "/attn/wq" in p})
+    assign[stack[0]] = 8  # one 8-bit layer promotes the whole wq stack
+    art = rtn_mixed_artifact(params, assign, cfg=cfg)
+    man = art.manifest
+    # every assigned layer recorded at its true width; embed stays pinned
+    assert {p: man["bits_by_path"][p] for p in shapes} == assign
+    assert man["bits_by_path"]["embed/table"] == 8
+    hist = art.stats["bits_histogram"]
+    assert hist["8"] >= 1 and hist["2"] == sum(
+        1 for b in assign.values() if b == 2)
+    # promoted container: the wq stack is int8-wide but a 2-bit-only
+    # stack still packs sub-byte
+    art2 = rtn_mixed_artifact(params, {p: 2 for p in shapes}, cfg=cfg)
+    assert art.nbytes() > art2.nbytes()
+    art.save(str(tmp_path / "mixed"))
+    back = QuantizedArtifact.load(str(tmp_path / "mixed"))
+    assert back.manifest["bits_by_path"] == man["bits_by_path"]
+    assert back.stats["bits_histogram"] == hist
+    for a, b in zip(jax.tree.leaves(art.params), jax.tree.leaves(back.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_budget_artifact_bytes_end_to_end(reduced_lm, tmp_path):
+    """budget_artifact: artifact bytes <= budget exactly, the manifest
+    records the solve, and the packed model still decodes."""
+    cfg, model, params = reduced_lm
+    sens = weight_sens_table(params, cfg.n_layers)
+    lo = rtn_mixed_artifact(params, {p: 2 for p in sens.shapes},
+                            cfg=cfg).nbytes()
+    hi = rtn_mixed_artifact(params, {p: 8 for p in sens.shapes},
+                            cfg=cfg).nbytes()
+    budget = (lo + hi) // 2
+    art, sol, table = budget_artifact(params, sens, budget, kind="bytes",
+                                      cfg=cfg)
+    assert art.nbytes() <= budget
+    assert table.kind == "bytes"
+    man = art.manifest["budget"]
+    assert man["budget"] == budget and man["artifact_bytes"] == art.nbytes()
+    assert man["kind"] == "bytes" and man["bits_histogram"]
+    assert man["artifact_bytes"] - man["overhead_bytes"] == pytest.approx(
+        sol.cost)
+    # tighter budget than the 2-bit floor is infeasible with the
+    # fixed overhead spelled out
+    with pytest.raises(BudgetInfeasibleError, match="fixed bytes"):
+        budget_artifact(params, sens, lo // 2, kind="bytes", cfg=cfg)
+    # the artifact decodes
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, 8)))
+    logits, _ = model.prefill(art.params, {"tokens": toks},
+                              model.init_cache(2, 16, jnp.float32),
+                              art.hook(), remat="none")
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_ensure_cost_table_caches_in_manifest(reduced_lm):
+    cfg, model, params = reduced_lm
+    shapes = dict(list(weight_shapes(params, cfg.n_layers).items())[:2])
+    art = rtn_mixed_artifact(params, {p: 4 for p in
+                                      weight_shapes(params, cfg.n_layers)},
+                             cfg=cfg)
+    t1 = ensure_cost_table(art, shapes, m=1, inner=2, reps=1)
+    backend = jax.default_backend()
+    assert art.manifest["cost_tables"][backend]["meta"]["m"] == 1
+    t2 = ensure_cost_table(art, shapes, m=1, inner=2, reps=1)
+    assert t2 == t1  # served from the manifest cache, not re-measured
+    # different decode rows invalidate the cache
+    t3 = ensure_cost_table(art, shapes, m=4, inner=2, reps=1)
+    assert t3.meta["m"] == 4
+
+
+def test_serve_cli_budget_flow(tmp_path):
+    """serve --budget-bytes B ships an artifact with nbytes <= B and a
+    manifest that records the solve."""
+    from repro.deploy import QuantizedArtifact
+    from repro.launch import serve
+    from repro.models import get_model
+
+    cfg, model = get_model("brecq_lm_100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    sens = weight_sens_table(params, cfg.n_layers)
+    lo = rtn_mixed_artifact(params, {p: 2 for p in sens.shapes},
+                            cfg=cfg).nbytes()
+    hi = rtn_mixed_artifact(params, {p: 8 for p in sens.shapes},
+                            cfg=cfg).nbytes()
+    budget = (lo + hi) // 2
+    gen = serve.main(["--reduced", "--budget-bytes", str(budget),
+                      "--batch", "2", "--prompt-len", "8", "--gen-len", "2",
+                      "--save-artifact", str(tmp_path / "art")])
+    assert gen.shape == (2, 2)
+    art = QuantizedArtifact.load(str(tmp_path / "art"))
+    assert art.nbytes() <= budget
+    assert art.manifest["budget"]["kind"] == "bytes"
+    assert art.manifest["budget"]["artifact_bytes"] == art.nbytes()

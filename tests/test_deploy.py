@@ -209,6 +209,40 @@ def test_packed_decode_matches_baked_forward(w4_export):
                                    atol=2e-4, rtol=1e-4)
 
 
+def test_mixed_export_histogram_matches_bits_by_path(tiny_trained, tmp_path):
+    """After container promotion — including W3, which always ships in an
+    int8 container — the manifest's per-path bits and the stats histogram
+    must agree, and both must survive a save/load round trip. The budget
+    solver's accounting leans on bits_by_path recording *logical* widths,
+    never the promoted container."""
+    cfg, model, params, calib, evalb, _ = tiny_trained
+    mixed = {"body.0/sub0/attn/wq": 3, "body.1/sub0/attn/wq": 8,
+             "body.1/sub0/mlp/w_down": 2}
+    res = quantize(model, params, calib[:2],
+                   ReconConfig(w_bits=4, iters=5, per_layer_bits=mixed))
+    art = export(model, res)
+    for path, bits in mixed.items():
+        assert art.manifest["bits_by_path"][path] == bits
+
+    def hist_of(bits_by_path):
+        h = {}
+        for b in bits_by_path.values():
+            h[str(b)] = h.get(str(b), 0) + 1
+        return h
+
+    assert art.stats["bits_histogram"] == hist_of(art.manifest["bits_by_path"])
+    art.save(str(tmp_path / "w3mixed"))
+    back = QuantizedArtifact.load(str(tmp_path / "w3mixed"))
+    assert back.manifest["bits_by_path"] == art.manifest["bits_by_path"]
+    assert back.stats["bits_histogram"] == art.stats["bits_histogram"]
+    # the W3 layer's stack really is int8-promoted on disk, yet still
+    # dequantizes exactly
+    _assert_dequant_equals_baked(back.params, res.params_q)
+    wq = back.params["body"]["sub0"]["attn"]["wq"]
+    k = res.params_q["body"]["sub0"]["attn"]["wq"]["w"].shape[-2]
+    assert wq["w"].shape[-2] == k  # one int8 row per code row
+
+
 def test_mixed_precision_export(tiny_trained):
     """per_layer_bits exports exactly via container promotion and the
     manifest records the true per-path widths."""

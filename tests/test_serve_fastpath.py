@@ -78,6 +78,41 @@ def test_decode_tier_override(rng, monkeypatch):
     assert select_tier(1, qw) == "decode"
 
 
+def test_measured_dispatch_table(rng, monkeypatch):
+    """An installed measured dispatch table reroutes decode-shaped calls
+    per (K, N, container bits); REPRO_QMM_DISPATCH forces either mode,
+    uncovered shapes keep the gemv guess, and the decode-tier kill
+    switch still beats the table."""
+    monkeypatch.delenv("REPRO_QMM_DISPATCH", raising=False)
+    qw = from_node(_node(rng), 64)      # K=64, N=128, 4-bit container
+    qw3 = from_node(_node(rng, E=3), 64)
+    qw_other = from_node(_node(rng, N=32), 64)
+    assert qmm_ops.dispatch_mode() == "heuristic"
+    try:
+        qmm_ops.set_dispatch_table({(64, 128, 4): "prefill"})
+        assert qmm_ops.dispatch_mode() == "measured"
+        assert select_tier(2, qw) == "prefill"    # measured winner
+        assert select_tier(128, qw) == "prefill"  # big-M path unchanged
+        assert select_tier(2, qw3) == "grouped"   # 3-D stacks unaffected
+        assert select_tier(2, qw_other) == "decode"  # uncovered shape
+        # env override: heuristic opts out of an installed table...
+        monkeypatch.setenv("REPRO_QMM_DISPATCH", "heuristic")
+        assert qmm_ops.dispatch_mode() == "heuristic"
+        assert select_tier(2, qw) == "decode"
+        # ...and measured re-enables it
+        monkeypatch.setenv("REPRO_QMM_DISPATCH", "measured")
+        assert select_tier(2, qw) == "prefill"
+        monkeypatch.delenv("REPRO_QMM_DISPATCH")
+        # the decode-tier kill switch wins over everything
+        qmm_ops.set_decode_tier(False)
+        assert select_tier(2, qw) == "prefill"
+        assert select_tier(2, qw_other) == "prefill"
+    finally:
+        qmm_ops.set_decode_tier(None)
+        qmm_ops.set_dispatch_table(None)
+    assert select_tier(2, qw) == "decode"
+
+
 # ---------------------------------------------------------------------------
 # from_node typed errors
 # ---------------------------------------------------------------------------
