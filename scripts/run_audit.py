@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Static auditor: compiled-program lints, Pallas kernel checks, AST
+repo lints — one entry point for the CI ``audit`` job.
+
+    python scripts/run_audit.py                    # everything, quick configs
+    python scripts/run_audit.py --family ast       # one rule family
+    python scripts/run_audit.py --configs all      # wider arch coverage
+    python scripts/run_audit.py --list-rules       # the rule catalog
+
+Families (see docs/static_analysis.md for the full catalog):
+
+  program   jaxpr + optimized-HLO rules over the repo's real programs
+            (qmm tiers, serve decode/prefill, the serve engine's two
+            compiled programs, budget-packed decode, the calibration
+            scan step): no_materialized_f32_weight, donation_respected,
+            no_host_transfer, stable_compile_cache.
+  kernel    trace-free tile-math + VMEM sweep of every Pallas kernel
+            over ALL registered full-scale configs (kernels/spec.py).
+  ast       stdlib-ast lints over src/ (host syncs in jitted bodies,
+            mutable defaults, bare asserts in kernels/, interpret=True
+            defaults).
+
+Exit 0 = no violations; exit 1 with every violation listed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--family", choices=("program", "kernel", "ast", "all"),
+                    default="all")
+    ap.add_argument("--configs", choices=("quick", "all"), default="quick",
+                    help="program-family arch scope: quick = the two "
+                    "canonical serving archs; all adds more decode archs "
+                    "(kernel checks always sweep every registered config)")
+    ap.add_argument("--no-calib", action="store_true",
+                    help="skip the micro-quantize calibration capture "
+                    "(the slowest program-family step)")
+    ap.add_argument("--src", default=None, metavar="PATH",
+                    help="tree to AST-lint instead of src/ (tests use "
+                    "this to drive the non-zero exit path)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import audit  # registers program rules
+    from repro.analysis.audit import ast_lint, kernel_check  # noqa: F401  (register catalogs)
+    from repro.analysis.audit.rules import registered_rules
+
+    if args.list_rules:
+        for r in registered_rules():
+            print(f"{r.family:8s} {r.name}")
+            if args.verbose and r.doc:
+                print(f"         {r.doc}")
+        return 0
+
+    verbose = print if args.verbose else (lambda s: None)
+    violations = []
+
+    if args.family in ("ast", "all"):
+        src = Path(args.src) if args.src else ROOT / "src"
+        print(f"== ast: linting {src} ==")
+        violations += ast_lint.run_ast_lint(src, verbose=verbose)
+
+    if args.family in ("kernel", "all"):
+        print("== kernel: tile math + VMEM over registered configs ==")
+        from repro.models.registry import ARCH_IDS
+        violations += kernel_check.run_kernel_checks(ARCH_IDS,
+                                                     verbose=verbose)
+
+    if args.family in ("program", "all"):
+        print(f"== program: jaxpr/HLO rules over real programs "
+              f"({args.configs} configs) ==")
+        from repro.analysis.audit.program_check import build_programs
+        from repro.analysis.audit.rules import run_program_rules
+        programs, builder_viol = build_programs(
+            args.configs, with_calib=not args.no_calib)
+        violations += builder_viol
+        violations += run_program_rules(programs, verbose=verbose)
+
+    if violations:
+        print(f"\nAUDIT FAILED: {len(violations)} violation(s)")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print("\naudit clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Program auditor: jaxpr/HLO invariant lints + Pallas kernel static
+checks + AST-level repo lints.
+
+Three rule families, one entry point (``scripts/run_audit.py``, CI job
+``audit``):
+
+* ``program`` — walks jaxprs and optimized-HLO text of the repo's
+  *real* programs (qmm tiers, the calibration scan step, serve-engine
+  decode/prefill-chunk, mixed-precision artifacts) and enforces the
+  compiled-program invariants past PRs pinned one-off: no materialized
+  f32 stacked-weight dequant, declared buffer donations still lower as
+  donations, no host transfers in hot programs, no retraces across
+  same-structure calls.
+* ``kernel`` — static tile-math checks of every Pallas kernel via
+  ``repro.kernels.spec``: grid/BlockSpec divisibility against the
+  registered configs' shapes and estimated VMEM vs the declared budget.
+* ``ast`` — stdlib-``ast`` lints over ``src/``: host syncs inside
+  jitted bodies, mutable default args, bare asserts under ``kernels/``,
+  ``interpret=True`` defaults.
+
+See ``docs/static_analysis.md`` for the rule catalog and suppression
+syntax.
+"""
+from .rules import (AuditProgram, Rule, Violation, iter_jaxprs,  # noqa: F401
+                    registered_rules, rule, run_program_rules)

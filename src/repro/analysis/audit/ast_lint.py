@@ -1,0 +1,226 @@
+"""AST-level repo lints (stdlib ``ast`` only — no imports of the code
+under audit).
+
+Rules (see ``docs/static_analysis.md`` for the catalog):
+
+* ``no_host_sync_in_jit`` — no ``time.*`` calls, ``.item()`` /
+  ``.block_until_ready()`` calls or ``np.asarray`` / ``jax.device_get``
+  inside the body of a function that is jitted (``@jax.jit`` /
+  ``@partial(jax.jit, ...)`` decorators, or ``jax.jit(name)`` applied
+  anywhere in the same file). These force a device sync per call and
+  have repeatedly snuck timing code into traced bodies.
+* ``no_mutable_default_arg`` — no ``[]`` / ``{}`` / ``set()`` default
+  argument values anywhere under ``src/``.
+* ``no_bare_assert_in_kernels`` — ``kernels/`` raises typed
+  ``KernelSpecError`` / ``PackedNodeError``; a bare ``assert`` there
+  strips under ``python -O`` and reports no shapes.
+* ``no_interpret_default_true`` — ``interpret=True`` as a *parameter
+  default* outside ``tests``/CI guards silently pins the slow Pallas
+  interpreter; call sites must opt in per-backend.
+
+Suppression: a line comment ``# audit: ignore[rule_name]`` on the
+offending line (or the ``def`` line for defaults) skips that finding;
+``--verbose`` runs surface every suppression so they stay visible.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Callable, Iterable, Optional
+
+from .rules import Violation, register_catalog_rule
+
+register_catalog_rule(
+    "no_host_sync_in_jit", "ast",
+    "No time.* / .item() / .block_until_ready() / np.asarray / "
+    "jax.device_get calls inside jitted function bodies.")
+register_catalog_rule(
+    "no_mutable_default_arg", "ast",
+    "No mutable default argument values ([] / {} / set()) under src/.")
+register_catalog_rule(
+    "no_bare_assert_in_kernels", "ast",
+    "kernels/ must raise typed KernelSpecError/PackedNodeError instead "
+    "of bare asserts (assert strips under -O and names no shapes).")
+register_catalog_rule(
+    "no_interpret_default_true", "ast",
+    "No interpret=True parameter defaults outside tests/CI guards.")
+
+_IGNORE_RE = re.compile(r"#\s*audit:\s*ignore\[([\w,\s]+)\]")
+
+# calls that force a host round-trip when traced into a jitted body
+_HOST_ATTR_CALLS = {"item", "block_until_ready"}
+_HOST_MODULE_CALLS = {("time", None), ("np", "asarray"), ("numpy", "asarray"),
+                      ("jax", "device_get")}
+
+
+def _ignores(source: str) -> dict[int, set]:
+    """line number -> rule names suppressed on that line."""
+    out: dict[int, set] = {}
+    for i, line in enumerate(source.splitlines(), 1):
+        m = _IGNORE_RE.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",")}
+    return out
+
+
+def _call_root(node: ast.AST) -> tuple[Optional[str], Optional[str]]:
+    """('time', 'perf_counter') for time.perf_counter(...), ('np',
+    'asarray'), (None, 'item') for x.item(), etc."""
+    if isinstance(node, ast.Attribute):
+        if isinstance(node.value, ast.Name):
+            return node.value.id, node.attr
+        return None, node.attr
+    if isinstance(node, ast.Name):
+        return node.id, None
+    return None, None
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """@jax.jit, @jit, @partial(jax.jit, ...), @functools.partial(jit, ...)."""
+    if isinstance(dec, ast.Call):
+        root, attr = _call_root(dec.func)
+        if (root, attr) in (("jax", "jit"), ("jit", None)):
+            return True
+        if attr == "partial" or root == "partial":
+            return any(_is_jit_decorator(a) for a in dec.args)
+        return False
+    root, attr = _call_root(dec)
+    return (root, attr) in (("jax", "jit"), ("jit", None))
+
+
+def _jitted_names(tree: ast.Module) -> set:
+    """Names of functions the file jits anywhere: ``jax.jit(f)`` /
+    ``jit(f, ...)`` call arguments plus @jit-decorated defs."""
+    names: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            root, attr = _call_root(node.func)
+            if (root, attr) in (("jax", "jit"), ("jit", None)):
+                for a in node.args[:1]:
+                    if isinstance(a, ast.Name):
+                        names.add(a.id)
+                    elif isinstance(a, ast.Attribute):
+                        names.add(a.attr)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(d) for d in node.decorator_list):
+                names.add(node.name)
+    return names
+
+
+def _check_host_sync(tree, path: str, ignores, emit) -> None:
+    jitted = _jitted_names(tree)
+    if not jitted:
+        return
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn.name not in jitted:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            root, attr = _call_root(node.func)
+            bad = None
+            if root == "time":
+                bad = f"time.{attr}()"
+            elif (root, attr) in _HOST_MODULE_CALLS:
+                bad = f"{root}.{attr}()"
+            elif attr in _HOST_ATTR_CALLS and not node.args:
+                bad = f".{attr}()"
+            if bad is None:
+                continue
+            if "no_host_sync_in_jit" in ignores.get(node.lineno, ()):
+                continue
+            emit(Violation(
+                "no_host_sync_in_jit", f"{path}:{node.lineno}",
+                f"{bad} inside jitted function {fn.name!r} forces a host "
+                f"sync every call (hoist it out of the traced body)"))
+
+
+def _check_mutable_defaults(tree, path: str, ignores, emit) -> None:
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for default in list(fn.args.defaults) + [
+                d for d in fn.args.kw_defaults if d is not None]:
+            mutable = isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(default, ast.Call)
+                and isinstance(default.func, ast.Name)
+                and default.func.id in ("list", "dict", "set"))
+            if not mutable:
+                continue
+            if ("no_mutable_default_arg" in ignores.get(default.lineno, ())
+                    or "no_mutable_default_arg" in ignores.get(fn.lineno, ())):
+                continue
+            emit(Violation(
+                "no_mutable_default_arg", f"{path}:{default.lineno}",
+                f"mutable default argument in {fn.name!r} (shared across "
+                f"calls — default to None and build inside)"))
+
+
+def _check_bare_asserts(tree, path: str, ignores, emit) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assert):
+            continue
+        if "no_bare_assert_in_kernels" in ignores.get(node.lineno, ()):
+            continue
+        emit(Violation(
+            "no_bare_assert_in_kernels", f"{path}:{node.lineno}",
+            "bare assert in kernels/ (strips under -O, names no shapes) — "
+            "raise KernelSpecError via kernels.spec instead"))
+
+
+def _check_interpret_defaults(tree, path: str, ignores, emit) -> None:
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        args = fn.args
+        named = args.posonlyargs + args.args + args.kwonlyargs
+        defaults = ([None] * (len(args.posonlyargs) + len(args.args)
+                              - len(args.defaults))
+                    + list(args.defaults) + list(args.kw_defaults))
+        for arg, default in zip(named, defaults):
+            if (arg.arg == "interpret" and isinstance(default, ast.Constant)
+                    and default.value is True):
+                if "no_interpret_default_true" in ignores.get(fn.lineno, ()):
+                    continue
+                emit(Violation(
+                    "no_interpret_default_true", f"{path}:{fn.lineno}",
+                    f"{fn.name!r} defaults interpret=True — the Pallas "
+                    f"interpreter must be an explicit per-backend opt-in"))
+
+
+def lint_file(path: Path, root: Path,
+              emit: Callable[[Violation], None],
+              verbose: Callable[[str], None] = lambda s: None) -> None:
+    rel = str(path.relative_to(root))
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as e:
+        emit(Violation("ast_parse", rel, f"does not parse: {e}"))
+        return
+    ignores = _ignores(source)
+    for line, rules in sorted(ignores.items()):
+        verbose(f"  suppressed {sorted(rules)} at {rel}:{line}")
+    _check_host_sync(tree, rel, ignores, emit)
+    _check_mutable_defaults(tree, rel, ignores, emit)
+    if "/kernels/" in str(path).replace("\\", "/"):
+        _check_bare_asserts(tree, rel, ignores, emit)
+    _check_interpret_defaults(tree, rel, ignores, emit)
+
+
+def run_ast_lint(src_root, files: Optional[Iterable] = None,
+                 verbose: Callable[[str], None] = lambda s: None
+                 ) -> list[Violation]:
+    """Lint every ``.py`` under ``src_root`` (or an explicit file list)."""
+    root = Path(src_root)
+    out: list[Violation] = []
+    targets = ([Path(f) for f in files] if files is not None
+               else sorted(root.rglob("*.py")))
+    for path in targets:
+        lint_file(path, root if root in path.parents or path == root
+                  else path.parent, out.append, verbose)
+    return out

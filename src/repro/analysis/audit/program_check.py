@@ -1,0 +1,312 @@
+"""Builders of :class:`AuditProgram` descriptors for the repo's real
+compiled programs.
+
+Every builder returns descriptors for programs the repo actually ships —
+the qmm dispatch tiers, serving decode/prefill (launch and engine
+paths), budget-packed mixed-precision decode, and the calibration scan
+step captured live from a micro ``quantize()`` run — each annotated with
+the invariants past PRs established for it:
+
+* decode-path programs carry ``forbidden_f32`` — the full-dequant shapes
+  of their stacked packed leaves (the grouped tier's (E, K, N) and the
+  scan stacks' (n, K, N) must never re-materialize in f32);
+* programs the repo runs with buffer donation carry ``donate_argnums``
+  (the launch decode loop's KV cache, the calibration scan's opt state);
+* steady-state programs carry ``repeat_args`` so a retrace on a
+  same-structure second call is caught.
+
+Prefill programs deliberately do *not* carry ``forbidden_f32``: the
+grouped-dense XLA reference materializes (E, K, N) per layer by design
+at prefill arithmetic intensity (see ``kernels/qmatmul/ref.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .rules import AuditProgram, Violation
+
+QUICK_ARCHS = ("brecq_lm_100m", "deepseek_moe_16b")
+# Decode-capable archs beyond the quick set, exercised by --configs all.
+EXTRA_ARCHS = ("tinyllama_1_1b", "gemma3_12b", "hymba_1_5b")
+
+
+def forbidden_f32_shapes(params) -> frozenset:
+    """Full-dequant f32 shapes for every *stacked* packed leaf in a
+    params tree.
+
+    A packed node ``{"w": int8 (..., rows, N), "qscale": ...}`` packs
+    ``per`` codes per container row (per in {1, 2, 4} — int8/int4/int2);
+    the leaf alone does not reveal ``per``, so every candidate logical
+    K = rows * per is forbidden. Only stacked shapes (ndim >= 3) are
+    returned: the 2-D per-layer (K, N) unscaled-code materialization is
+    a legitimate XLA decode-reference step (``qgemv_ref``), while a full
+    (E, K, N) / (n, K, N) f32 stack is exactly the residency blowup the
+    grouped tier and scan layout exist to prevent.
+    """
+    shapes: set = set()
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return
+        w = node.get("w")
+        if w is not None and "qscale" in node and getattr(w, "ndim", 0) >= 3:
+            rows, n = w.shape[-2], w.shape[-1]
+            for per in (1, 2, 4):
+                shapes.add(tuple(w.shape[:-2]) + (rows * per, n))
+                if w.ndim >= 4:  # (n_layers, E, rows, N): per-layer slice too
+                    shapes.add(tuple(w.shape[1:-2]) + (rows * per, n))
+        for v in node.values():
+            walk(v)
+
+    walk(params)
+    return frozenset(shapes)
+
+
+# ---------------------------------------------------------------------------
+# qmm dispatch tiers
+# ---------------------------------------------------------------------------
+
+
+def qmm_programs(key=None) -> list[AuditProgram]:
+    """One program per qmm dispatch tier (decode gemv / prefill matmul /
+    grouped experts), over real packed nodes."""
+    from ...deploy import rtn_pack_leaf
+    from ...kernels.qmatmul.ops import from_node, qmm
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    K, N, E = 64, 128, 4
+    node2 = dict(zip(("w", "qscale"), rtn_pack_leaf(
+        jax.random.normal(k1, (K, N), jnp.float32), 4, None)))
+    node3 = dict(zip(("w", "qscale"), rtn_pack_leaf(
+        jax.random.normal(k2, (E, K, N), jnp.float32), 4, None)))
+
+    def tier2(x, w, qs):
+        return qmm(x, from_node({"w": w, "qscale": qs}, K))
+
+    def tier3(x, w, qs):
+        return qmm(x, from_node({"w": w, "qscale": qs}, K))
+
+    def prog(name, fn, node, x):
+        return AuditProgram(
+            name=name, fn=fn, args=(x, node["w"], node["qscale"]),
+            repeat_args=(x + 1.0, node["w"], node["qscale"]),
+            forbidden_f32=forbidden_f32_shapes({"n": node}))
+
+    return [
+        prog("qmm_decode", tier2, node2, jnp.ones((4, K), jnp.float32)),
+        prog("qmm_prefill", tier2, node2, jnp.ones((32, K), jnp.float32)),
+        prog("qmm_grouped_decode", tier3, node3,
+             jnp.ones((E, 2, K), jnp.float32)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# serving: launch-style decode/prefill per arch
+# ---------------------------------------------------------------------------
+
+
+def serve_programs(arch: str) -> list[AuditProgram]:
+    """Decode step (with the KV-cache donation ``launch/serve.py``
+    declares) and a prefill program for one reduced arch served from a
+    packed RTN artifact."""
+    from ...deploy import rtn_artifact
+    from ...models import get_model
+
+    cfg, model = get_model(arch, reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    art = rtn_artifact(params, 4, cfg=cfg)
+    B, T = 2, 16
+    cache = model.init_cache(B, T, jnp.float32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.full((B,), 4, jnp.int32)
+
+    def decode(p, t, c, q):
+        return model.decode_step(p, t, c, q)
+
+    def prefill(p, toks, c):
+        return model.prefill(p, {"tokens": toks}, c, remat="none")
+
+    toks = jnp.zeros((B, 8), jnp.int32)
+    return [
+        AuditProgram(
+            name=f"serve_decode[{arch}]", fn=decode,
+            args=(art.params, tok, cache, pos),
+            # launch/serve.py run_prefill_decode jits decode with
+            # donate_argnums=(2,): the KV cache is consumed each step
+            donate_argnums=(2,),
+            forbidden_f32=forbidden_f32_shapes(art.params),
+            repeat_args=(art.params, tok + 1, jax.tree.map(jnp.copy, cache),
+                         pos + 1)),
+        AuditProgram(
+            name=f"serve_prefill[{arch}]", fn=prefill,
+            args=(art.params, toks, jax.tree.map(jnp.copy, cache))),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# serving: the continuous-batching engine's two compiled programs
+# ---------------------------------------------------------------------------
+
+
+def engine_programs(arch: str = "brecq_lm_100m") -> list[AuditProgram]:
+    """The ServeEngine's (num_slots, 1) decode and (1, prefill_chunk)
+    chunked-prefill programs, exactly as ``ServeEngine.compile()`` builds
+    them (un-jitted fns recovered from the engine's own jit wrappers)."""
+    from ...deploy import rtn_artifact
+    from ...models import get_model
+    from ...serve_engine import EngineConfig, ServeEngine
+
+    cfg, model = get_model(arch, reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    art = rtn_artifact(params, 4, cfg=cfg)
+    ecfg = EngineConfig(num_slots=2, page_size=8, num_pages=9, max_len=32,
+                        prefill_chunk=8)
+    eng = ServeEngine(model, art.params, ecfg, quant=art.hook())
+    bt = jnp.asarray(eng.block_tables)
+    tok = jnp.zeros((ecfg.num_slots, 1), jnp.int32)
+    pos = jnp.zeros((ecfg.num_slots,), jnp.int32)
+    tokc = jnp.zeros((1, ecfg.prefill_chunk), jnp.int32)
+    forbidden = forbidden_f32_shapes(art.params)
+    return [
+        AuditProgram(
+            name=f"engine_decode[{arch}]", fn=eng._decode_jit.__wrapped__,
+            args=(eng.params, tok, eng.cache, pos, bt),
+            forbidden_f32=forbidden,
+            repeat_args=(eng.params, tok + 1, jax.tree.map(jnp.copy, eng.cache),
+                         pos + 1, bt)),
+        AuditProgram(
+            name=f"engine_prefill_chunk[{arch}]",
+            fn=eng._chunk_jit.__wrapped__,
+            args=(eng.params, tokc, jax.tree.map(jnp.copy, eng.cache),
+                  pos[:1], bt[:1])),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# budget-packed mixed-precision artifact
+# ---------------------------------------------------------------------------
+
+
+def budget_programs(arch: str = "brecq_lm_100m") -> list[AuditProgram]:
+    """Decode over a budget-style mixed-precision artifact (alternating
+    2/4-bit per-layer assignment, container promotion within stacks) —
+    the deployment class ``deploy.budget`` produces."""
+    from ...deploy import rtn_mixed_artifact
+    from ...deploy.budget import weight_shapes
+    from ...models import get_model
+
+    cfg, model = get_model(arch, reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    assign = {p: (4 if i % 2 else 2)
+              for i, p in enumerate(sorted(weight_shapes(params)))}
+    art = rtn_mixed_artifact(params, assign, cfg=cfg)
+    B, T = 2, 16
+    cache = model.init_cache(B, T, jnp.float32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.full((B,), 4, jnp.int32)
+
+    def decode(p, t, c, q):
+        return model.decode_step(p, t, c, q)
+
+    return [AuditProgram(
+        name=f"budget_decode[{arch}]", fn=decode,
+        args=(art.params, tok, cache, pos),
+        donate_argnums=(2,),
+        forbidden_f32=forbidden_f32_shapes(art.params),
+        repeat_args=(art.params, tok + 1, jax.tree.map(jnp.copy, cache),
+                     pos + 1))]
+
+
+# ---------------------------------------------------------------------------
+# calibration: the scan step, captured from a live micro-quantize
+# ---------------------------------------------------------------------------
+
+
+def calib_audit(n_layers: int = 2, iters: int = 2
+                ) -> tuple[list[AuditProgram], list[Violation]]:
+    """Run a micro ``quantize()`` with ``calib_loop.AUDIT_CAPTURE``
+    installed and return
+
+    * AuditPrograms for the captured scan programs (re-declared with the
+      donation argnums ``calib_loop`` specifies — ``_donate()`` strips
+      them on CPU, so the auditor re-lowers with the declared set), and
+    * compiled-unit-cache violations: with ``n_layers`` identical
+      transformer blocks the unit program must be traced once and reused
+      (``unit_hits >= n_layers - 1``); zero hits means the cache key
+      broke and every block of a real run would recompile.
+    """
+    import dataclasses as _dc
+
+    from ...core import ReconConfig, calib_loop, quantize
+    from ...data import Corpus, CorpusConfig, make_batches
+    from ...models import build_model, get_config
+
+    cfg = _dc.replace(get_config("brecq_lm_100m", reduced=True),
+                      n_layers=n_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = Corpus(CorpusConfig(vocab=cfg.vocab))
+    calib = make_batches(corpus, 2, 4, 32, seed=1)
+
+    calib_loop.clear_cache()
+    captured: list = []
+    calib_loop.AUDIT_CAPTURE = captured
+    try:
+        quantize(model, params, calib,
+                 ReconConfig(w_bits=4, iters=iters, calib_bs=4, seed=0))
+    finally:
+        calib_loop.AUDIT_CAPTURE = None
+    stats = calib_loop.cache_stats()
+
+    donate = {"unit_scan": calib_loop.UNIT_DONATE,
+              "layer_scan": calib_loop.LAYER_DONATE}
+    programs, seen = [], set()
+    for tag, jitted, args in captured:
+        if tag in seen:
+            continue
+        seen.add(tag)
+        programs.append(AuditProgram(
+            name=f"calib_{tag}", fn=jitted.__wrapped__, args=args,
+            donate_argnums=donate[tag]))
+
+    violations = []
+    if not captured:
+        violations.append(Violation(
+            "stable_compile_cache", "calib_unit_scan",
+            "micro-quantize captured no scan programs (AUDIT_CAPTURE hook "
+            "broken or unit loop bypassed)"))
+    elif stats["unit_hits"] < n_layers - 1:
+        violations.append(Violation(
+            "stable_compile_cache", "calib_unit_scan",
+            f"{n_layers} identical blocks produced only "
+            f"{stats['unit_hits']} compiled-unit cache hit(s) "
+            f"(misses={stats['unit_misses']}): the unit program cache key "
+            f"no longer keys on structure and real runs would retrace "
+            f"per block"))
+    return programs, violations
+
+
+# ---------------------------------------------------------------------------
+# the default program set
+# ---------------------------------------------------------------------------
+
+
+def build_programs(configs: str = "quick", *, with_calib: bool = True
+                   ) -> tuple[list[AuditProgram], list[Violation]]:
+    """All audited programs for a config scope plus any violations the
+    builders detect directly (calibration cache-hit accounting)."""
+    archs = QUICK_ARCHS if configs == "quick" else QUICK_ARCHS + EXTRA_ARCHS
+    programs: list[AuditProgram] = []
+    violations: list[Violation] = []
+    programs += qmm_programs()
+    for arch in archs:
+        programs += serve_programs(arch)
+    programs += engine_programs()
+    programs += budget_programs()
+    if with_calib:
+        calib_progs, calib_viol = calib_audit()
+        programs += calib_progs
+        violations += calib_viol
+    return programs, violations

@@ -1,0 +1,340 @@
+"""Declarative rule engine for compiled-program audits.
+
+The engine separates *what is audited* from *what is checked*:
+
+* an :class:`AuditProgram` describes one real program — a plain callable
+  plus example arguments, with declared expectations (donated argnums,
+  forbidden f32 shapes, same-structure repeat arguments);
+* a :class:`Rule` is a named check ``(AuditProgram) -> [Violation]``,
+  registered with the :func:`rule` decorator so the catalog stays
+  introspectable (``scripts/run_audit.py --list-rules``, the docs
+  table);
+* :func:`run_program_rules` applies every applicable rule to every
+  program and returns the flat violation list.
+
+The jaxpr walker that two serve-fastpath tests used to hand-roll lives
+here (:func:`iter_jaxprs`) — one implementation, shared by rules and
+tests. HLO-text rules reuse ``repro.analysis.hlo``'s parser.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import warnings
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..hlo import _OP_RE, split_computations
+
+__all__ = ["Violation", "AuditProgram", "Rule", "rule", "registered_rules",
+           "iter_jaxprs", "run_program_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One audited invariant broken at one place."""
+
+    rule: str
+    subject: str  # program name / kernel launch / file:line
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.subject}: {self.message}"
+
+
+@dataclasses.dataclass
+class AuditProgram:
+    """One real program under audit.
+
+    ``fn`` is the *un-jitted* callable; the engine jits/lowers it as
+    each rule requires. ``args`` are example arguments (arrays or
+    ``ShapeDtypeStruct``). Expectations:
+
+    * ``donate_argnums`` — argnums the repo declares donated for this
+      program (``donation_respected`` re-lowers with them and checks);
+    * ``forbidden_f32`` — shapes (tuples) that must never appear as an
+      f32 equation output anywhere in the jaxpr
+      (``no_materialized_f32_weight``); typically the full dequantized
+      shapes of stacked packed weight nodes;
+    * ``repeat_args`` — a second, freshly-built argument set with the
+      identical structure; ``stable_compile_cache`` calls the jitted
+      program with both and fails on a retrace.
+
+    ``suppress`` maps rule name -> reason; suppressed rules are skipped
+    for this program but the reason is surfaced in ``--verbose`` runs so
+    suppressions stay visible.
+    """
+
+    name: str
+    fn: Callable
+    args: tuple
+    donate_argnums: tuple = ()
+    forbidden_f32: frozenset = frozenset()
+    repeat_args: Optional[tuple] = None
+    suppress: dict = dataclasses.field(default_factory=dict)
+    jaxpr: Any = None  # memoized by the engine
+
+    def get_jaxpr(self):
+        if self.jaxpr is None:
+            self.jaxpr = jax.make_jaxpr(self.fn)(*self.args)
+        return self.jaxpr
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    family: str  # 'program' | 'kernel' | 'ast'
+    doc: str
+    check: Optional[Callable] = None  # program rules: (AuditProgram) -> [Violation]
+
+
+_RULES: dict[str, Rule] = {}
+
+
+def rule(name: str, family: str = "program"):
+    """Register a rule. Program-family rules are callables applied by
+    :func:`run_program_rules`; kernel/ast rules register here for the
+    catalog only (their modules drive the checks)."""
+
+    def deco(fn: Callable) -> Callable:
+        _RULES[name] = Rule(name, family, (fn.__doc__ or "").strip(), fn)
+        return fn
+
+    return deco
+
+
+def register_catalog_rule(name: str, family: str, doc: str) -> None:
+    """Catalog entry for a rule implemented outside the program engine."""
+    _RULES[name] = Rule(name, family, doc, None)
+
+
+def registered_rules(family: Optional[str] = None) -> list[Rule]:
+    rules = list(_RULES.values())
+    if family is not None:
+        rules = [r for r in rules if r.family == family]
+    return sorted(rules, key=lambda r: (r.family, r.name))
+
+
+# ---------------------------------------------------------------------------
+# the one jaxpr walker
+# ---------------------------------------------------------------------------
+
+
+def iter_jaxprs(jaxpr):
+    """Yield ``jaxpr`` and every sub-jaxpr reachable through equation
+    params (scan/while/cond bodies, pjit calls, custom derivatives).
+
+    This is the single jaxpr-walking implementation in the repo — the
+    serve-fastpath residency tests and the ``no_materialized_f32_weight``
+    rule both build on it.
+    """
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for u in v if isinstance(v, (list, tuple)) else (v,):
+                if hasattr(u, "jaxpr"):  # ClosedJaxpr
+                    yield from iter_jaxprs(u.jaxpr)
+                elif hasattr(u, "eqns"):
+                    yield from iter_jaxprs(u)
+
+
+def f32_outvars_matching(jaxpr, shapes) -> list[tuple[str, tuple]]:
+    """(primitive name, shape) for every f32 equation output whose shape
+    is in ``shapes``, anywhere in the (nested) jaxpr."""
+    shapes = set(shapes)
+    return [
+        (eqn.primitive.name, v.aval.shape)
+        for jx in iter_jaxprs(jaxpr) for eqn in jx.eqns
+        for v in eqn.outvars
+        if getattr(v.aval, "shape", None) in shapes
+        and getattr(v.aval, "dtype", None) == jnp.float32]
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def _abstract(args):
+    """Concrete arrays -> ShapeDtypeStructs, so lowering can never be
+    broken by donated/deleted buffers captured earlier."""
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+        if hasattr(a, "shape") and hasattr(a, "dtype") else a, args)
+
+
+def lower_program(prog: AuditProgram, donate: tuple = ()):
+    """Lower ``prog.fn`` (suppressing the CPU donation warnings the
+    audit deliberately triggers)."""
+    jf = jax.jit(prog.fn, donate_argnums=donate)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        return jf.lower(*_abstract(prog.args))
+
+
+def compiled_hlo(prog: AuditProgram, donate: tuple = ()) -> str:
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        return lower_program(prog, donate).compile().as_text()
+
+
+def count_io_aliases(hlo: str) -> int:
+    """Number of parameter buffers aliased to outputs in the module
+    header's ``input_output_alias`` map (brace-balanced scan: entries
+    nest braces, e.g. ``{ {0}: (2, {}, may-alias) }``)."""
+    start = hlo.find("input_output_alias={")
+    if start < 0:
+        return 0
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, len(hlo)):
+        if hlo[j] == "{":
+            depth += 1
+        elif hlo[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return len(re.findall(r"\(\s*\d+\s*,", hlo[i:j]))
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# program rules
+# ---------------------------------------------------------------------------
+
+
+@rule("no_materialized_f32_weight")
+def check_no_materialized_f32_weight(prog: AuditProgram) -> list[Violation]:
+    """No f32 equation output anywhere in the program's jaxpr may have a
+    forbidden full-dequant shape — e.g. a stacked MoE expert node's
+    (E, K, N): serving must consume packed codes tile-/expert-wise, the
+    transient full dequant the grouped qmm tier removed must not come
+    back."""
+    if not prog.forbidden_f32:
+        return []
+    offenders = f32_outvars_matching(prog.get_jaxpr().jaxpr,
+                                     prog.forbidden_f32)
+    return [Violation(
+        "no_materialized_f32_weight", prog.name,
+        f"f32 {shape} materialized by primitive {prim!r} (full dequantized "
+        f"weight resident in the trace)") for prim, shape in offenders]
+
+
+@rule("donation_respected")
+def check_donation_respected(prog: AuditProgram) -> list[Violation]:
+    """Programs that declare donated argnums must still lower with every
+    leaf of those arguments marked donated, and the compiled module must
+    alias at least as many input buffers to outputs as the donation
+    promises (a dropped donation doubles peak residency of the
+    calibration optimizer state / the serving KV cache)."""
+    if not prog.donate_argnums:
+        return []
+    out = []
+    lo = lower_program(prog, donate=prog.donate_argnums)
+    info = lo.args_info[0] if isinstance(lo.args_info, tuple) else lo.args_info
+    donated_leaves = 0
+    for argnum in prog.donate_argnums:
+        leaves = jax.tree.leaves(info[argnum],
+                                 is_leaf=lambda x: hasattr(x, "donated"))
+        bad = [l for l in leaves if not getattr(l, "donated", False)]
+        donated_leaves += len(leaves) - len(bad)
+        if bad:
+            out.append(Violation(
+                "donation_respected", prog.name,
+                f"argnum {argnum} declares donation but {len(bad)}/"
+                f"{len(leaves)} of its buffers lower undonated"))
+    if donated_leaves:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            hlo = lo.compile().as_text()
+        aliased = count_io_aliases(hlo)
+        if aliased < donated_leaves:
+            out.append(Violation(
+                "donation_respected", prog.name,
+                f"{donated_leaves} buffers donated at lowering but the "
+                f"compiled module aliases only {aliased} input(s) to "
+                f"outputs (donation dropped by the compiler — shape or "
+                f"dtype mismatch between the donated buffer and every "
+                f"output?)"))
+    return out
+
+
+# Hot programs must not round-trip through the host: infeed/outfeed and
+# host send/recv serialize the device stream, and host-offload
+# custom-calls hide a PCIe copy inside a "compiled" program.
+_HOST_OPS = {"infeed", "outfeed", "send", "recv", "send-done", "recv-done"}
+_HOST_CALL_RE = re.compile(
+    r'custom_call_target="(MoveToHost|MoveToDevice|'
+    r'annotate_device_placement|xla_ffi_python_cpu_callback|'
+    r'xla_python_cpu_callback|xla_python_gpu_callback|CallbackCustomCall)"')
+
+
+@rule("no_host_transfer")
+def check_no_host_transfer(prog: AuditProgram) -> list[Violation]:
+    """The optimized HLO of a hot program must contain no host
+    transfers: no infeed/outfeed, no send/recv, no host-offload or
+    python-callback custom-calls. Parsed with ``analysis/hlo.py``'s
+    computation splitter so nested computations are covered."""
+    hlo = compiled_hlo(prog)
+    out = []
+    comps, _ = split_computations(hlo)
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = _OP_RE.match(ln)
+            op = m.group(3) if m else None
+            if op in _HOST_OPS:
+                out.append(Violation(
+                    "no_host_transfer", prog.name,
+                    f"host-transfer op {op!r} in computation {cname!r}"))
+            hm = _HOST_CALL_RE.search(ln)
+            if hm:
+                out.append(Violation(
+                    "no_host_transfer", prog.name,
+                    f"host callback/offload custom-call "
+                    f"{hm.group(1)!r} in computation {cname!r}"))
+    return out
+
+
+@rule("stable_compile_cache")
+def check_stable_compile_cache(prog: AuditProgram) -> list[Violation]:
+    """Two calls with identical argument structure must hit one compiled
+    executable: a retrace on the second call means the program keys on
+    object identity or mutable global state, and every serve/calib step
+    would recompile in production."""
+    if prog.repeat_args is None:
+        return []
+    jf = jax.jit(prog.fn)
+    jf(*prog.args)
+    n1 = jf._cache_size()
+    jf(*prog.repeat_args)
+    n2 = jf._cache_size()
+    if n2 > n1:
+        return [Violation(
+            "stable_compile_cache", prog.name,
+            f"second same-structure call retraced (compile cache grew "
+            f"{n1} -> {n2})")]
+    return []
+
+
+PROGRAM_RULES = ("no_materialized_f32_weight", "donation_respected",
+                 "no_host_transfer", "stable_compile_cache")
+
+
+def run_program_rules(programs, rules: Optional[tuple] = None,
+                      verbose: Callable[[str], None] = lambda s: None
+                      ) -> list[Violation]:
+    """Apply every (non-suppressed) program rule to every program."""
+    names = rules if rules is not None else PROGRAM_RULES
+    out: list[Violation] = []
+    for prog in programs:
+        for name in names:
+            if name in prog.suppress:
+                verbose(f"  suppressed {name} on {prog.name}: "
+                        f"{prog.suppress[name]}")
+                continue
+            found = _RULES[name].check(prog)
+            verbose(f"  {prog.name}: {name} -> "
+                    + (f"{len(found)} violation(s)" if found else "ok"))
+            out.extend(found)
+    return out

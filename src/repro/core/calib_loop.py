@@ -108,6 +108,20 @@ _TRACE_LOG: list[str] = []  # appended at trace time; tests assert on it
 _HITS = {"unit": 0, "layer": 0, "probe": 0, "cap": 0}
 _MISSES = {"unit": 0, "layer": 0, "probe": 0, "cap": 0}
 
+# Declared buffer donations of the calibration scan/step programs:
+# (opt, ostate) — positions in the scan_program signature. The static
+# auditor (repro.analysis.audit) re-lowers the programs with these
+# argnums unconditionally (``_donate`` drops them on CPU) and fails if
+# the lowering no longer marks them donated.
+UNIT_DONATE = (2, 3)
+LAYER_DONATE = (2, 3)
+
+# Audit capture hook: when a list is installed here, run_unit_loop /
+# run_layer_loop append (tag, jitted_program, args) for every scan-mode
+# dispatch, giving the auditor real program + argument pairs to re-lower
+# without re-implementing the calibration plumbing.
+AUDIT_CAPTURE: list | None = None
+
 
 def cache_stats() -> dict:
     return {"unit_hits": _HITS["unit"], "unit_misses": _MISSES["unit"],
@@ -291,8 +305,8 @@ def _build_unit_programs(model, walker, stackdefs, is_dec, cfgs: dict,
         return apply_unit(NO_QUANT, bparams, x, batch, mem).astype(sdt)
 
     return UnitPrograms(
-        scan=jax.jit(scan_program, donate_argnums=_donate(2, 3)),
-        step=jax.jit(step_program, donate_argnums=_donate(2, 3)),
+        scan=jax.jit(scan_program, donate_argnums=_donate(*UNIT_DONATE)),
+        step=jax.jit(step_program, donate_argnums=_donate(*UNIT_DONATE)),
         hard=jax.jit(hard_program),
         fwd=jax.jit(fwd_program),
         model_ref=model_ref, walker_cell=walker_cell)
@@ -315,6 +329,10 @@ def run_unit_loop(progs: UnitPrograms, rc, bparams, states, opt, ostate, key,
                 lr_scale)
             losses.append(float(l))
         return opt, np.asarray(losses, np.float64)
+    if AUDIT_CAPTURE is not None:
+        AUDIT_CAPTURE.append(("unit_scan", progs.scan,
+                              (bparams, states, opt, ostate, key, x_q, x_fp,
+                               z_fp, g2, batch, mem, lr_scale)))
     opt, ostate, losses = progs.scan(bparams, states, opt, ostate, key,
                                      x_q, x_fp, z_fp, g2, batch, mem, lr_scale)
     return opt, np.asarray(losses)  # the single sync for the trajectory
@@ -495,8 +513,8 @@ def _build_layer_programs(qc, rc, bs: int, lead: int) -> LayerPrograms:
         return (*carry, loss)
 
     return LayerPrograms(
-        scan=jax.jit(scan_program, donate_argnums=_donate(2, 3)),
-        step=jax.jit(step_program, donate_argnums=_donate(2, 3)))
+        scan=jax.jit(scan_program, donate_argnums=_donate(*LAYER_DONATE)),
+        step=jax.jit(step_program, donate_argnums=_donate(*LAYER_DONATE)))
 
 
 def run_layer_loop(progs: LayerPrograms, rc, W, st, opt, ostate, key, xin, zt,
@@ -510,5 +528,8 @@ def run_layer_loop(progs: LayerPrograms, rc, W, st, opt, ostate, key, xin, zt,
                 lr_scale)
             losses.append(float(l))
         return opt, np.asarray(losses, np.float64)
+    if AUDIT_CAPTURE is not None:
+        AUDIT_CAPTURE.append(("layer_scan", progs.scan,
+                              (W, st, opt, ostate, key, xin, zt, lr_scale)))
     opt, ostate, losses = progs.scan(W, st, opt, ostate, key, xin, zt, lr_scale)
     return opt, np.asarray(losses)

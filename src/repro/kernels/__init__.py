@@ -8,4 +8,11 @@ Each kernel lives in its own subpackage:
 Layout per subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py
 (jit'd public wrapper with interpret/XLA fallbacks), ref.py (pure-jnp
 oracle used by the allclose sweeps in tests/).
+
+``spec.py`` is the shared static layer: per-kernel ``describe_*``
+functions validate a launch's tile math (raising
+:class:`~repro.kernels.spec.KernelSpecError` with the offending shapes
+named) and return grid/block/VMEM descriptions that
+``repro.analysis.audit.kernel_check`` sweeps without a device.
 """
+from .spec import KernelSpec, KernelSpecError  # noqa: F401

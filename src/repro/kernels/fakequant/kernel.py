@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..spec import describe_fakequant
+
 ZETA, GAMMA = 1.1, -0.1
 
 
@@ -35,13 +37,16 @@ def _fq_kernel(w_ref, v_ref, s_ref, o_ref, *, qmin, qmax, hard):
                                              "bn", "interpret"))
 def fakequant(w: jax.Array, v: jax.Array, scale: jax.Array, *, qmin: int,
               qmax: int, hard: bool = False, bk: int = 256, bn: int = 256,
-              interpret: bool = True) -> jax.Array:
-    """w, v: (K, N); scale: (1, N) or (K, N). AdaRound fake-quant."""
+              interpret: bool = False) -> jax.Array:
+    """w, v: (K, N); scale: (1, N) or (K, N). AdaRound fake-quant.
+    Tile-math violations raise
+    :class:`~repro.kernels.spec.KernelSpecError` naming the shapes."""
     K, N = w.shape
     bk = min(bk, K)
     bn = min(bn, N)
-    assert K % bk == 0 and N % bn == 0, (K, bk, N, bn)
-    per_row = scale.shape[0] != 1
+    sp = describe_fakequant(w.shape, scale.shape, bk=bk, bn=bn,
+                            w_bytes=w.dtype.itemsize)
+    per_row = sp.meta["per_row"]
     return pl.pallas_call(
         functools.partial(_fq_kernel, qmin=qmin, qmax=qmax, hard=hard),
         grid=(K // bk, N // bn),

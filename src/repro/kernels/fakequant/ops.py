@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 
 from ...core.quantizer import QConfig, QState
+from ..spec import KernelSpecError, largest_tile
 from .kernel import fakequant
 from .ref import fakequant_ref
 
@@ -27,8 +28,21 @@ def adaround_forward(w: jax.Array, v: jax.Array, st: QState, cfg: QConfig,
 
     Returns:
       Fake-quantized weight, shape (K, N), f32.
+
+    Raises:
+      KernelSpecError: for weight ranks or quantizer configs the fused
+        kernel does not cover (grouped or asymmetric quantization) —
+        callers fall back to ``core.adaround`` for those.
     """
-    assert w.ndim == 2 and cfg.group_size is None and cfg.symmetric
+    if w.ndim != 2:
+        raise KernelSpecError(
+            f"adaround_forward: weights must be 2-D (K, N), got shape "
+            f"{tuple(w.shape)}")
+    if cfg.group_size is not None or not cfg.symmetric:
+        raise KernelSpecError(
+            f"adaround_forward: only symmetric per-channel quantization is "
+            f"fused (group_size=None, symmetric=True); got unsupported "
+            f"config group_size={cfg.group_size}, symmetric={cfg.symmetric}")
     scale = st.scale.reshape(-1, w.shape[1])
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -36,7 +50,7 @@ def adaround_forward(w: jax.Array, v: jax.Array, st: QState, cfg: QConfig,
         return fakequant_ref(w, v, scale, cfg.qmin, cfg.qmax, hard)
     interpret = jax.default_backend() != "tpu"
     K, N = w.shape
-    bk = 256 if K % 256 == 0 else (8 if K % 8 == 0 else 1)
-    bn = 256 if N % 256 == 0 else (128 if N % 128 == 0 else N)
+    bk = largest_tile(K, 256)
+    bn = largest_tile(N, 256)
     return fakequant(w, v, scale, qmin=cfg.qmin, qmax=cfg.qmax, hard=hard,
                      bk=bk, bn=bn, interpret=interpret)

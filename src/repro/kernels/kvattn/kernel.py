@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..spec import describe_kv_decode
+
 Array = jax.Array
 MASK = -1e30
 
@@ -67,15 +69,16 @@ def _kv_kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
 @functools.partial(jax.jit, static_argnames=("window", "bs", "interpret"))
 def kv_decode(q: Array, k8: Array, v8: Array, kscale: Array, vscale: Array,
               kpos: Array, cur_pos: Array, *, window=None, bs: int = 512,
-              interpret: bool = True) -> Array:
+              interpret: bool = False) -> Array:
     """q (B,H,hd); k8/v8 (B,S,K,hd) int8; scales (B,S,K); kpos (B,S) int32;
-    cur_pos (B,) int32. Returns (B,H,hd)."""
+    cur_pos (B,) int32. Returns (B,H,hd). Tile-math violations raise
+    :class:`~repro.kernels.spec.KernelSpecError` naming the shapes."""
     B, H, hd = q.shape
     S, K = k8.shape[1], k8.shape[2]
-    G = H // K
     bs = min(bs, S)
-    assert S % bs == 0, (S, bs)
-    ns = S // bs
+    sp = describe_kv_decode(q.shape, k8.shape, bs=bs,
+                            q_bytes=q.dtype.itemsize)
+    G, ns = sp.meta["G"], sp.meta["ns"]
 
     # regroup: (B, K, G, hd) query groups; (B, K, S, hd) caches
     qg = q.reshape(B, K, G, hd)

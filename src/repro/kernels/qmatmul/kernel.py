@@ -32,6 +32,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..spec import (describe_qgemv, describe_qmatmul,
+                    describe_qmatmul_grouped)
+
 Array = jax.Array
 
 
@@ -58,13 +61,6 @@ def _unpack_tile(wp: Array, bits: int) -> Array:
     return codes.astype(jnp.float32)
 
 
-def _pick_bk(K: int, G: int, per: int) -> tuple[int, int]:
-    """(bk, nk): one scale group per k-step, or a 512 cap per-channel."""
-    bk = min(K, 512) if G == 1 else K // G
-    assert K % bk == 0 and bk % per == 0, (K, bk, per)
-    return bk, K // bk
-
-
 def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
     k = pl.program_id(2)
 
@@ -85,19 +81,22 @@ def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
 
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "interpret"))
 def qmatmul(x: Array, w_packed: Array, scales: Array, *, bits: int,
-            bm: int = 128, bn: int = 128, interpret: bool = True) -> Array:
-    """x (M, K) @ dequant(w_packed (K/per, N), scales (K/G, N)) -> (M, N)."""
-    per = 8 // bits
+            bm: int = 128, bn: int = 128, interpret: bool = False) -> Array:
+    """x (M, K) @ dequant(w_packed (K/per, N), scales (K/G, N)) -> (M, N).
+
+    Tile-math violations raise :class:`~repro.kernels.spec.KernelSpecError`
+    with the offending shapes named (see ``spec.describe_qmatmul``).
+    """
     M, K = x.shape
     N = w_packed.shape[1]
     G = scales.shape[0]
-    assert w_packed.shape[0] * per == K, (w_packed.shape, K, bits)
-    bk, nk = _pick_bk(K, G, per)
     bm = min(bm, M)
     bn = min(bn, N)
-    assert M % bm == 0 and N % bn == 0, (M, bm, N, bn)
+    sp = describe_qmatmul(x.shape, w_packed.shape, scales.shape, bits=bits,
+                          bm=bm, bn=bn, x_bytes=x.dtype.itemsize)
+    per, bk, nk = sp.meta["per"], sp.meta["bk"], sp.meta["nk"]
 
-    grid = (M // bm, N // bn, nk)
+    grid = sp.grid
     return pl.pallas_call(
         functools.partial(_qmatmul_kernel, bits=bits, nk=nk),
         grid=grid,
@@ -139,7 +138,7 @@ def _qgemv_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
 
 @functools.partial(jax.jit, static_argnames=("bits", "bn", "interpret"))
 def qgemv(x: Array, w_packed: Array, scales: Array, *, bits: int,
-          bn: int = 128, interpret: bool = True) -> Array:
+          bn: int = 128, interpret: bool = False) -> Array:
     """Decode-shaped x (M, K) @ dequant(w_packed, scales) -> (M, N).
 
     M is the decode batch (a handful of rows): the whole M extent is one
@@ -149,16 +148,15 @@ def qgemv(x: Array, w_packed: Array, scales: Array, *, bits: int,
     accumulator stays resident in VMEM), and each step applies its scale
     row to the partial sum instead of the weight tile.
     """
-    per = 8 // bits
     M, K = x.shape
     N = w_packed.shape[1]
-    G = scales.shape[0]
-    assert w_packed.shape[0] * per == K, (w_packed.shape, K, bits)
-    bk, nk = _pick_bk(K, G, per)
     bn = min(bn, N)
-    assert N % bn == 0, (N, bn)
+    sp = describe_qgemv(x.shape, w_packed.shape, scales.shape, bits=bits,
+                        bn=bn, x_bytes=x.dtype.itemsize)
+    per, bk, nk = sp.meta["per"], sp.meta["bk"], sp.meta["nk"]
+    G = scales.shape[0]
 
-    grid = (N // bn, nk)
+    grid = sp.grid
     return pl.pallas_call(
         functools.partial(_qgemv_kernel, bits=bits, nk=nk),
         grid=grid,
@@ -195,7 +193,7 @@ def _qmm_grouped_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int,
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "interpret"))
 def qmatmul_grouped(x: Array, w_packed: Array, scales: Array, *, bits: int,
                     bm: int = 128, bn: int = 128,
-                    interpret: bool = True) -> Array:
+                    interpret: bool = False) -> Array:
     """Grouped expert GEMM: x (E, M, K) @ dequant((E, K/per, N)) -> (E, M, N).
 
     The expert dim is the leading (outermost) grid axis, so each
@@ -205,19 +203,17 @@ def qmatmul_grouped(x: Array, w_packed: Array, scales: Array, *, bits: int,
     trick match :func:`qgemv`; M (tokens routed per expert) keeps the
     true row count when it is at most one sublane tile.
     """
-    per = 8 // bits
     E, M, K = x.shape
     N = w_packed.shape[2]
-    G = scales.shape[1]
-    assert w_packed.shape[0] == E and scales.shape[0] == E, (
-        x.shape, w_packed.shape, scales.shape)
-    assert w_packed.shape[1] * per == K, (w_packed.shape, K, bits)
-    bk, nk = _pick_bk(K, G, per)
     bm = min(bm, M)
     bn = min(bn, N)
-    assert M % bm == 0 and N % bn == 0, (M, bm, N, bn)
+    sp = describe_qmatmul_grouped(x.shape, w_packed.shape, scales.shape,
+                                  bits=bits, bm=bm, bn=bn,
+                                  x_bytes=x.dtype.itemsize)
+    per, bk, nk = sp.meta["per"], sp.meta["bk"], sp.meta["nk"]
+    G = scales.shape[1]
 
-    grid = (E, M // bm, N // bn, nk)
+    grid = sp.grid
     return pl.pallas_call(
         functools.partial(_qmm_grouped_kernel, bits=bits, nk=nk),
         grid=grid,

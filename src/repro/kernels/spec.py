@@ -1,0 +1,254 @@
+"""Static kernel-launch specs + typed tile-math errors.
+
+The single source of truth for the tile math of every Pallas kernel in
+``repro.kernels``: each ``describe_*`` function validates one launch's
+shapes — raising :class:`KernelSpecError` that *names the offending
+shapes* instead of a bare ``assert`` tuple — and returns a
+:class:`KernelSpec` describing the grid, the per-operand VMEM block
+shapes, and the estimated VMEM footprint of one program instance.
+
+Two consumers share it:
+
+* the kernel wrappers (``qmatmul/kernel.py``, ``kvattn/kernel.py``,
+  ``fakequant/kernel.py``) call their ``describe_*`` before
+  ``pl.pallas_call`` so a mis-tiled launch fails typed, with shapes
+  named, before any tracing happens;
+* the static auditor (``repro.analysis.audit.kernel_check``) calls the
+  same functions over the registered configs' weight/cache shapes
+  without touching a device, so CI catches a BlockSpec that silently
+  mis-tiles (or a VMEM blow-up) the moment a kernel or config changes.
+
+The VMEM model is deliberately simple and documented: input blocks are
+double-buffered (Pallas pipelines the HBM copies), the output block and
+scratch are single-buffered. ``VMEM_BUDGET_BYTES`` is the declared
+per-core budget the auditor enforces (16 MB on current TPUs, with a
+safety margin left to the compiler).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# Declared VMEM budget per program instance. TPU cores have ~16 MB of
+# VMEM; the compiler needs headroom for semaphores/pipelining, so the
+# audit budget is deliberately below the hardware size.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+class KernelSpecError(ValueError):
+    """A kernel launch's shapes violate its tiling contract.
+
+    Raised (with the failing shapes named) instead of the bare
+    ``assert``s the kernels used to carry — catchable by the static
+    auditor and by users feeding odd shapes. Mirrors the
+    ``PackedNodeError`` pattern in ``qmatmul/ops.py``.
+    """
+
+
+def _check(cond: bool, kernel: str, msg: str) -> None:
+    if not cond:
+        raise KernelSpecError(f"{kernel}: {msg}")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Static description of one Pallas kernel launch."""
+
+    kernel: str
+    grid: tuple[int, ...]
+    blocks: dict  # operand name -> (block shape, dtype bytes)
+    scratch: dict  # scratch name -> (shape, dtype bytes)
+    meta: dict  # kernel-specific derived tiling (bk, nk, ...)
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Estimated VMEM per program instance: double-buffered input
+        blocks + single-buffered output/scratch."""
+        total = 0
+        for name, (shape, nbytes) in self.blocks.items():
+            mult = 1 if name.startswith("out") else 2
+            total += mult * math.prod(shape) * nbytes
+        for shape, nbytes in self.scratch.values():
+            total += math.prod(shape) * nbytes
+        return total
+
+    @property
+    def num_programs(self) -> int:
+        return math.prod(self.grid)
+
+    def check_budget(self, budget: int = VMEM_BUDGET_BYTES) -> None:
+        _check(self.vmem_bytes <= budget, self.kernel,
+               f"estimated VMEM {self.vmem_bytes} bytes/program exceeds "
+               f"the declared budget {budget} (grid {self.grid}, blocks "
+               f"{ {k: v[0] for k, v in self.blocks.items()} })")
+
+
+def _bits_per(kernel: str, bits: int) -> int:
+    _check(bits in (2, 4, 8), kernel,
+           f"container bits must be 2, 4 or 8, got {bits}")
+    return 8 // bits
+
+
+def largest_tile(dim: int, cap: int, multiple: int = 1) -> int:
+    """Largest divisor of ``dim`` that is <= ``cap`` and a multiple of
+    ``multiple``; when no such divisor exists, ``min(dim, cap)`` (the
+    caller's divisibility ``_check`` then fails with the shapes named).
+
+    The shared tile-picker for dims real configs do NOT make powers of
+    two (d_model 3840, d_ff 10944, vocab 51865): a flat cap would leave
+    a ragged last step the kernels' BlockSpecs cannot express.
+    """
+    for d in range(min(dim, cap), 0, -1):
+        if dim % d == 0 and d % multiple == 0:
+            return d
+    return min(dim, cap)
+
+
+def _pick_bk(kernel: str, K: int, G: int, per: int) -> tuple[int, int]:
+    """(bk, nk): one scale group per k-step, or the largest <=512
+    divisor per-channel."""
+    bk = largest_tile(K, 512, per) if G == 1 else K // G
+    _check(K % bk == 0, kernel,
+           f"K={K} is not a multiple of the k-tile bk={bk} "
+           f"(scale groups G={G})")
+    _check(bk % per == 0, kernel,
+           f"k-tile bk={bk} is not a multiple of the packing factor "
+           f"per={per} ({8 // per}-bit codes)")
+    return bk, K // bk
+
+
+def describe_qmatmul(x_shape, wp_shape, scales_shape, *, bits: int,
+                     bm: int, bn: int, x_bytes: int = 4) -> KernelSpec:
+    """Validate + describe a ``qmatmul`` (prefill GEMM) launch.
+
+    x (M, K) @ dequant(wp (K*bits/8, N), scales (K/G, N)) -> (M, N),
+    grid (M/bm, N/bn, nk).
+    """
+    name = "qmatmul"
+    per = _bits_per(name, bits)
+    M, K = x_shape
+    rows, N = wp_shape
+    G = scales_shape[0]
+    _check(rows * per == K, name,
+           f"packed rows {rows} x {per} values/byte != K={K} "
+           f"(codes {tuple(wp_shape)}, x {tuple(x_shape)}, bits={bits})")
+    _check(scales_shape[1] == N, name,
+           f"scales {tuple(scales_shape)} do not span N={N} columns")
+    bk, nk = _pick_bk(name, K, G, per)
+    _check(M % bm == 0, name, f"M={M} is not a multiple of bm={bm}")
+    _check(N % bn == 0, name, f"N={N} is not a multiple of bn={bn}")
+    return KernelSpec(
+        kernel=name, grid=(M // bm, N // bn, nk),
+        blocks={"x": ((bm, bk), x_bytes), "w": ((bk // per, bn), 1),
+                "scales": ((1, bn), 4), "out": ((bm, bn), x_bytes)},
+        scratch={"acc": ((bm, bn), 4)},
+        meta={"bk": bk, "nk": nk, "bm": bm, "bn": bn, "per": per})
+
+
+def describe_qgemv(x_shape, wp_shape, scales_shape, *, bits: int,
+                   bn: int, x_bytes: int = 4) -> KernelSpec:
+    """Validate + describe a ``qgemv`` (decode GEMV) launch.
+
+    The whole M extent (decode batch rows) is one skinny block; grid
+    (N/bn, nk) with the (M, bn) accumulator VMEM-resident.
+    """
+    name = "qgemv"
+    per = _bits_per(name, bits)
+    M, K = x_shape
+    rows, N = wp_shape
+    G = scales_shape[0]
+    _check(rows * per == K, name,
+           f"packed rows {rows} x {per} values/byte != K={K} "
+           f"(codes {tuple(wp_shape)}, x {tuple(x_shape)}, bits={bits})")
+    _check(scales_shape[1] == N, name,
+           f"scales {tuple(scales_shape)} do not span N={N} columns")
+    bk, nk = _pick_bk(name, K, G, per)
+    _check(N % bn == 0, name, f"N={N} is not a multiple of bn={bn}")
+    return KernelSpec(
+        kernel=name, grid=(N // bn, nk),
+        blocks={"x": ((M, bk), x_bytes), "w": ((bk // per, bn), 1),
+                "scales": ((1, bn), 4), "out": ((M, bn), x_bytes)},
+        scratch={"acc": ((M, bn), 4)},
+        meta={"bk": bk, "nk": nk, "bn": bn, "per": per})
+
+
+def describe_qmatmul_grouped(x_shape, wp_shape, scales_shape, *, bits: int,
+                             bm: int, bn: int, x_bytes: int = 4) -> KernelSpec:
+    """Validate + describe a ``qmatmul_grouped`` (stacked experts) launch.
+
+    x (E, M, K) @ dequant((E, K*bits/8, N)) -> (E, M, N), expert-major
+    grid (E, M/bm, N/bn, nk).
+    """
+    name = "qmatmul_grouped"
+    per = _bits_per(name, bits)
+    E, M, K = x_shape
+    rows, N = wp_shape[1], wp_shape[2]
+    G = scales_shape[1]
+    _check(wp_shape[0] == E and scales_shape[0] == E, name,
+           f"expert axes disagree: x E={E}, codes {tuple(wp_shape)}, "
+           f"scales {tuple(scales_shape)}")
+    _check(rows * per == K, name,
+           f"packed rows {rows} x {per} values/byte != K={K} "
+           f"(codes {tuple(wp_shape)}, x {tuple(x_shape)}, bits={bits})")
+    _check(scales_shape[2] == N, name,
+           f"scales {tuple(scales_shape)} do not span N={N} columns")
+    bk, nk = _pick_bk(name, K, G, per)
+    _check(M % bm == 0, name, f"M={M} is not a multiple of bm={bm}")
+    _check(N % bn == 0, name, f"N={N} is not a multiple of bn={bn}")
+    return KernelSpec(
+        kernel=name, grid=(E, M // bm, N // bn, nk),
+        blocks={"x": ((1, bm, bk), x_bytes), "w": ((1, bk // per, bn), 1),
+                "scales": ((1, 1, bn), 4), "out": ((1, bm, bn), x_bytes)},
+        scratch={"acc": ((bm, bn), 4)},
+        meta={"bk": bk, "nk": nk, "bm": bm, "bn": bn, "per": per})
+
+
+def describe_kv_decode(q_shape, k8_shape, *, bs: int,
+                       q_bytes: int = 4) -> KernelSpec:
+    """Validate + describe a ``kv_decode`` (int8-KV attention) launch.
+
+    q (B, H, hd) over int8 caches (B, S, K_heads, hd); grid (B, K, S/bs)
+    with the (G, hd) query group resident while S streams.
+    """
+    name = "kv_decode"
+    B, H, hd = q_shape
+    S, K = k8_shape[1], k8_shape[2]
+    _check(K > 0 and H % K == 0, name,
+           f"query heads H={H} not divisible into kv heads K={K} "
+           f"(q {tuple(q_shape)}, cache {tuple(k8_shape)})")
+    G = H // K
+    _check(S % bs == 0, name,
+           f"cache length S={S} is not a multiple of the stream tile "
+           f"bs={bs} (cache {tuple(k8_shape)})")
+    return KernelSpec(
+        kernel=name, grid=(B, K, S // bs),
+        blocks={"q": ((1, 1, G, hd), q_bytes), "k": ((1, 1, bs, hd), 1),
+                "v": ((1, 1, bs, hd), 1), "kscale": ((1, 1, bs), 4),
+                "vscale": ((1, 1, bs), 4), "kpos": ((1, bs), 4),
+                "cur": ((1,), 4), "out": ((1, 1, G, hd), q_bytes)},
+        scratch={"m": ((G, 1), 4), "l": ((G, 1), 4), "acc": ((G, hd), 4)},
+        meta={"bs": bs, "ns": S // bs, "G": G})
+
+
+def describe_fakequant(w_shape, scale_shape, *, bk: int, bn: int,
+                       w_bytes: int = 4) -> KernelSpec:
+    """Validate + describe a ``fakequant`` (AdaRound forward) launch.
+
+    w, v (K, N) with a (1, N) or (K, N) scale; grid (K/bk, N/bn).
+    """
+    name = "fakequant"
+    K, N = w_shape
+    _check(K % bk == 0, name, f"K={K} is not a multiple of bk={bk} "
+           f"(w {tuple(w_shape)})")
+    _check(N % bn == 0, name, f"N={N} is not a multiple of bn={bn} "
+           f"(w {tuple(w_shape)})")
+    _check(scale_shape[0] in (1, K) and scale_shape[1] == N, name,
+           f"scale {tuple(scale_shape)} must be (1, {N}) or ({K}, {N})")
+    per_row = scale_shape[0] != 1
+    return KernelSpec(
+        kernel=name, grid=(K // bk, N // bn),
+        blocks={"w": ((bk, bn), w_bytes), "v": ((bk, bn), w_bytes),
+                "scale": ((bk if per_row else 1, bn), 4),
+                "out": ((bk, bn), w_bytes)},
+        scratch={},
+        meta={"bk": bk, "bn": bn, "per_row": per_row})

@@ -1,0 +1,167 @@
+"""analysis/hlo.py regex-parser coverage: synthetic HLO snippets (tuple
+shapes, nested whiles, ROOT ops, collectives) + real lowered modules.
+
+The audit's program rules (``no_host_transfer``, ``donation_respected``)
+ride on this parser, so its grammar is pinned here rather than implied
+by the end-to-end analysis tests.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo import (_OP_RE, _shape_bytes, _split_operands,
+                                analyze_computation, analyze_module,
+                                split_computations, trip_count)
+
+# ---------------------------------------------------------------------------
+# op-line grammar
+# ---------------------------------------------------------------------------
+
+OP_LINES = [
+    ("%add.1 = f32[8,16]{1,0} add(%p.0, %p.1)", "add.1", "add",
+     ["%p.0", "%p.1"]),
+    ("ROOT %tuple.5 = (f32[8]{0}, s32[]) tuple(%a, %b)", "tuple.5",
+     "tuple", ["%a", "%b"]),
+    ("d = f32[4,4]{1,0} dot(x, y), lhs_contracting_dims={1}, "
+     "rhs_contracting_dims={0}", "d", "dot", ["x", "y"]),
+    ("%ag = f32[32]{0} all-gather(%sh), replica_groups={{0,1}}", "ag",
+     "all-gather", ["%sh"]),
+    ("%w = (s32[], f32[2,3]{1,0}) while(%init), condition=%cond.2, "
+     "body=%body.3", "w", "while", ["%init"]),
+    ("%if.0 = f32[] infeed(%tok)", "if.0", "infeed", ["%tok"]),
+]
+
+
+@pytest.mark.parametrize("line,name,op,operands", OP_LINES,
+                         ids=[l[2] for l in OP_LINES])
+def test_op_re_grammar(line, name, op, operands):
+    m = _OP_RE.match(line)
+    assert m, line
+    assert m.group(1) == name
+    assert m.group(3) == op
+    assert _split_operands(m.group(4)) == operands
+
+
+def test_split_operands_nested():
+    # commas inside brackets/braces do not split; shape prefixes drop
+    assert _split_operands("%a, f32[2,3]{1,0} %b") == ["%a", "%b"]
+    assert _split_operands("(f32[4]{0}, s32[]) %t, %u") == ["%t", "%u"]
+
+
+def test_shape_bytes_tuple():
+    # tuple shapes sum element buffers; unknown dtypes are skipped
+    assert _shape_bytes("(f32[8]{0}, s8[16]{0})") == 8 * 4 + 16
+    assert _shape_bytes("token[]") == 0
+
+
+# ---------------------------------------------------------------------------
+# module splitting / while trip counts
+# ---------------------------------------------------------------------------
+
+NESTED_WHILE_HLO = """
+HloModule nested
+
+%inner_cond (arg.0: (s32[], f32[4])) -> pred[] {
+  %arg.0 = (s32[], f32[4]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg.0), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%inner_body (arg.1: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %arg.1 = (s32[], f32[4]{0}) parameter(0)
+  %x = f32[4]{0} get-tuple-element(%arg.1), index=1
+  %d = f32[4]{0} dot(%x, %x), lhs_contracting_dims={}, rhs_contracting_dims={}
+  ROOT %t = (s32[], f32[4]{0}) tuple(%i2, %d)
+}
+
+%outer_cond (arg.2: (s32[], f32[4])) -> pred[] {
+  %arg.2 = (s32[], f32[4]{0}) parameter(0)
+  %j = s32[] get-tuple-element(%arg.2), index=0
+  %m = s32[] constant(3)
+  ROOT %lt2 = pred[] compare(%j, %m), direction=LT
+}
+
+%outer_body (arg.3: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %arg.3 = (s32[], f32[4]{0}) parameter(0)
+  ROOT %w.in = (s32[], f32[4]{0}) while(%arg.3), condition=%inner_cond, body=%inner_body
+}
+
+ENTRY %main (p.0: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p.0 = (s32[], f32[4]{0}) parameter(0)
+  ROOT %w.out = (s32[], f32[4]{0}) while(%p.0), condition=%outer_cond, body=%outer_body
+}
+"""
+
+
+def test_split_computations_and_entry():
+    comps, entry = split_computations(NESTED_WHILE_HLO)
+    assert entry == "main"
+    assert set(comps) == {"inner_cond", "inner_body", "outer_cond",
+                          "outer_body", "main"}
+    # header and closing-brace lines are excluded, op lines kept
+    assert all("parameter" in ln or "=" in ln
+               for lines in comps.values() for ln in lines)
+
+
+def test_trip_count_from_condition():
+    comps, _ = split_computations(NESTED_WHILE_HLO)
+    assert trip_count(comps["inner_cond"]) == 5
+    assert trip_count(comps["outer_cond"]) == 3
+    assert trip_count(["no constants here"]) == 1
+
+
+def test_nested_while_multiplicity():
+    """The inner dot is counted 3 x 5 times: nested whiles multiply."""
+    s = analyze_module(NESTED_WHILE_HLO)
+    inner = analyze_computation(
+        split_computations(NESTED_WHILE_HLO)[0]["inner_body"])
+    assert inner.dot_flops > 0
+    assert s.flops == pytest.approx(15 * inner.dot_flops)
+
+
+COLLECTIVE_HLO = """
+HloModule coll
+
+ENTRY %main (p.0: f32[16]) -> f32[32] {
+  %p.0 = f32[16]{0} parameter(0)
+  %ar = f32[16]{0} all-reduce(%p.0), to_apply=%sum
+  ROOT %ag = f32[32]{0} all-gather(%ar), dimensions={0}
+}
+"""
+
+
+def test_collectives_counted_with_bytes():
+    s = analyze_module(COLLECTIVE_HLO)
+    assert s.collective_counts == {"all-reduce": 1, "all-gather": 1}
+    # both collectives move the 16-float operand (64 bytes each)
+    assert s.collective_bytes == pytest.approx(128)
+
+
+def test_while_scan_trip_count_real_module():
+    """A real jax.lax.scan lowers to a while whose trip count the parser
+    must recover: per-iteration dot FLOPs x n_steps."""
+    n, d = 7, 8
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, ()
+        y, _ = jax.lax.scan(body, x, None, length=n)
+        return y
+
+    x = jnp.ones((d, d), jnp.float32)
+    hlo = jax.jit(f).lower(x, x).compile().as_text()
+    s = analyze_module(hlo)
+    assert s.flops == pytest.approx(n * 2 * d * d * d)
+
+
+def test_root_and_comment_stripping():
+    comps, _ = split_computations(
+        "ENTRY %e (p: f32[2]) -> f32[2] {\n"
+        "  %p = f32[2]{0} parameter(0)\n"
+        "  ROOT %r = f32[2]{0} add(%p /*index=0*/, %p)\n"
+        "}\n")
+    (line,) = [ln for ln in comps["e"] if "add" in ln]
+    assert "/*" not in line
+    m = _OP_RE.match(line)
+    assert m and m.group(1) == "r" and m.group(3) == "add"

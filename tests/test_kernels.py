@@ -254,3 +254,27 @@ def test_fakequant_matches_core_adaround(rng):
         core = (adaround.hard_quant if hard else adaround.soft_quant)(w, v, st, cfg)
         kern = adaround_forward(w, v, st, cfg, hard=hard, backend="pallas")
         np.testing.assert_allclose(np.asarray(kern), np.asarray(core), atol=1e-5)
+
+
+def test_fakequant_unsupported_config_raises_typed(rng):
+    """Grouped or asymmetric configs the fused kernel does not cover
+    raise KernelSpecError naming the config (used to be a bare assert
+    with no message), and bad ranks name the offending shape."""
+    import pytest
+
+    from repro.kernels import KernelSpecError
+    from repro.kernels.fakequant.ops import adaround_forward
+
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    cfg = QConfig(bits=4, channel_axis=-1)
+    st = init_qstate(w, cfg)
+    v = jnp.zeros_like(w)
+
+    grouped = QConfig(bits=4, channel_axis=-1, group_size=32)
+    with pytest.raises(KernelSpecError, match="group_size=32"):
+        adaround_forward(w, v, st, grouped)
+    asym = QConfig(bits=4, channel_axis=-1, symmetric=False)
+    with pytest.raises(KernelSpecError, match="symmetric=False"):
+        adaround_forward(w, v, st, asym)
+    with pytest.raises(KernelSpecError, match=r"\(64, 32, 1\)"):
+        adaround_forward(w[..., None], v, st, cfg)

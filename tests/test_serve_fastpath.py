@@ -156,17 +156,6 @@ def test_grouped_qmm_rejects_low_rank_activations(rng):
 # ---------------------------------------------------------------------------
 
 
-def _iter_jaxprs(jaxpr):
-    yield jaxpr
-    for eqn in jaxpr.eqns:
-        for v in eqn.params.values():
-            for u in v if isinstance(v, (list, tuple)) else (v,):
-                if hasattr(u, "jaxpr"):  # ClosedJaxpr
-                    yield from _iter_jaxprs(u.jaxpr)
-                elif hasattr(u, "eqns"):
-                    yield from _iter_jaxprs(u)
-
-
 @pytest.fixture(scope="module")
 def moe_packed():
     from repro.models import get_model
@@ -199,23 +188,27 @@ def test_moe_decode_skips_dequant_leaf(moe_packed, monkeypatch):
 def test_moe_decode_residency_no_full_expert_dequant(moe_packed):
     """The decode trace holds no f32 (E, K, N) intermediate: the XLA
     grouped tier scans one expert at a time and the Pallas tier unpacks
-    per (expert, tile)."""
+    per (expert, tile). Checked through the audit rule engine — the same
+    ``no_materialized_f32_weight`` rule CI runs over every serve
+    program."""
+    from repro.analysis.audit.program_check import forbidden_f32_shapes
+    from repro.analysis.audit.rules import AuditProgram, run_program_rules
+
     cfg, model, art = moe_packed
     E = cfg.moe.n_experts
     d, f = cfg.d_model, cfg.moe.d_ff_expert
     cache = model.init_cache(2, 12, jnp.float32)
     tok = jnp.zeros((2, 1), jnp.int32)
     pos = jnp.full((2,), 8, jnp.int32)
-    jaxpr = jax.make_jaxpr(lambda p, t, c, q: model.decode_step(p, t, c, q))(
-        art.params, tok, cache, pos)
-    full_dequant = {(E, d, f), (E, f, d)}
-    offenders = [
-        (eqn.primitive.name, v.aval.shape)
-        for jx in _iter_jaxprs(jaxpr.jaxpr) for eqn in jx.eqns
-        for v in eqn.outvars
-        if getattr(v.aval, "shape", None) in full_dequant
-        and v.aval.dtype == jnp.float32]
-    assert not offenders, offenders
+    forbidden = forbidden_f32_shapes(art.params)
+    # the shape inference must cover the hand-derived expert shapes
+    assert {(E, d, f), (E, f, d)} <= set(forbidden)
+    prog = AuditProgram(
+        name="moe_decode", fn=lambda p, t, c, q: model.decode_step(p, t, c, q),
+        args=(art.params, tok, cache, pos), forbidden_f32=forbidden)
+    violations = run_program_rules([prog],
+                                   rules=("no_materialized_f32_weight",))
+    assert not violations, [str(v) for v in violations]
 
 
 def test_moe_packed_decode_matches_transient_dequant(moe_packed, rng):
