@@ -17,8 +17,18 @@ in ``BENCH_serve_mt.json`` at the repo root:
 
 Both passes use identical arrivals and lengths (same seed, and page
 consumption depends only on lengths), so the byte ratio is exact, not
-sampled noise. The CI ``serve-mt-smoke`` job runs a reduced 8-stream
-variant of this file and checks the same schema + zero leaked pages.
+sampled noise.
+
+A third section, ``pressure``, replays the same arrivals on a pool cut
+to ``--pool-frac`` of worst-case demand, once under worst-case
+reservation (``overcommit='none'`` — admission serializes, slots idle)
+and once under optimistic admission (``overcommit='prompt'`` — slots
+pack, the scheduler preempts on exhaustion). Tracked: the occupancy
+gain, the preemption/replay/expired/failed/cancelled counters, and the
+preemption overhead (replayed prefill chunks per decode tick), all
+guarded by ``scripts/check_serve_bench.py``. The CI ``serve-mt-smoke``
+job runs a reduced 8-stream variant of this file and checks the same
+schema + zero leaked pages.
 """
 from __future__ import annotations
 
@@ -37,21 +47,25 @@ from repro.serve_engine import EngineConfig, ServeEngine
 MT_JSON = Path(__file__).resolve().parents[1] / "BENCH_serve_mt.json"
 
 SCHEMA_KEYS = ("config", "int8", "fp16", "kv_bytes_ratio_fp16_over_int8",
-               "sustained_tok_s_int8")
+               "sustained_tok_s_int8", "pressure")
 RUN_KEYS = ("sustained_tok_s", "tokens_generated", "mean_slot_occupancy",
             "mean_resident_kv_bytes_per_stream", "bytes_per_page",
-            "peak_pages_in_use", "compile_s", "decode_ticks")
+            "peak_pages_in_use", "compile_s", "decode_ticks",
+            "preemptions", "replay_prefill_chunks", "expired", "failed",
+            "cancelled")
 
 
 def run_streams(model, weights, hook, kv_dtype, *, streams, slots, prompt,
-                gen, chunk, page_size, seed) -> dict:
+                gen, chunk, page_size, seed, overcommit="none",
+                num_pages=None) -> dict:
     """One full engine run; returns engine metrics + completion proof."""
     max_len = prompt + gen
     pages_per = -(-max_len // page_size)
     ecfg = EngineConfig(num_slots=slots, page_size=page_size,
-                        num_pages=1 + slots * pages_per, max_len=max_len,
+                        num_pages=num_pages or 1 + slots * pages_per,
+                        max_len=max_len,
                         prefill_chunk=min(chunk, prompt),
-                        kv_dtype=kv_dtype)
+                        kv_dtype=kv_dtype, overcommit=overcommit)
     eng = ServeEngine(model, weights, ecfg, quant=hook)
     eng.compile()
 
@@ -73,11 +87,18 @@ def run_streams(model, weights, hook, kv_dtype, *, streams, slots, prompt,
     assert done == streams, f"only {done}/{streams} streams completed"
     m = eng.metrics()
     m["streams_completed"] = done
+    m["leaked_pages"] = eng.pool.pages_in_use  # 0 — asserted above
     return m
 
 
-def bench(streams=64, slots=16, prompt=64, gen=32, chunk=16, page_size=16,
-          seed=0, arch="brecq_lm_100m", out=MT_JSON) -> dict:
+def _round_run(m: dict) -> dict:
+    return {k: (round(v, 3) if isinstance(v, float) else v)
+            for k, v in m.items() if k in RUN_KEYS
+            or k in ("streams_completed", "leaked_pages")}
+
+
+def bench(streams=64, slots=16, prompt=48, gen=48, chunk=32, page_size=16,
+          seed=0, pool_frac=0.35, arch="brecq_lm_100m", out=MT_JSON) -> dict:
     cfg, model = get_model(arch, reduced=True)
     params = model.init(jax.random.PRNGKey(seed))
     # serve what deployment ships: packed W4, saved + reloaded verified
@@ -91,14 +112,35 @@ def bench(streams=64, slots=16, prompt=64, gen=32, chunk=16, page_size=16,
     for kv_dtype in ("int8", "float16"):
         m = run_streams(model, art.params, art.hook(), kv_dtype, **kw)
         key = "fp16" if kv_dtype == "float16" else kv_dtype
-        runs[key] = {k: (round(v, 3) if isinstance(v, float) else v)
-                     for k, v in m.items() if k in RUN_KEYS
-                     or k == "streams_completed"}
+        runs[key] = _round_run(m)
         print(f"[{key}] {streams} streams/{slots} slots: "
               f"{m['tokens_generated']} tokens, "
               f"{m['sustained_tok_s']:.1f} tok/s sustained, occupancy "
               f"{m['mean_slot_occupancy']:.2f}, resident KV "
               f"{m['mean_resident_kv_bytes_per_stream']/1e3:.1f} KB/stream")
+
+    # pressure: identical arrivals on a pool at pool_frac of worst-case
+    # demand. Worst-case reservation serializes admission; optimistic
+    # 'prompt' admission packs slots and preempts on exhaustion — every
+    # stream must still complete with zero leaked pages.
+    pages_per = -(-(prompt + gen) // page_size)
+    press_pages = 1 + max(pages_per, int(pool_frac * slots * pages_per))
+    pressure = {"pool_frac": pool_frac, "num_pages": press_pages}
+    for oc in ("none", "prompt"):
+        m = run_streams(model, art.params, art.hook(), "int8",
+                        overcommit=oc, num_pages=press_pages, **kw)
+        pressure[oc] = _round_run(m)
+        print(f"[pressure/{oc}] occupancy {m['mean_slot_occupancy']:.2f}, "
+              f"{m['sustained_tok_s']:.1f} tok/s, "
+              f"{m['preemptions']} preemptions "
+              f"({m['replay_prefill_chunks']} replayed chunks / "
+              f"{m['decode_ticks']} decode ticks)")
+    pressure["occupancy_gain"] = round(
+        pressure["prompt"]["mean_slot_occupancy"]
+        / max(pressure["none"]["mean_slot_occupancy"], 1e-9), 3)
+    pressure["preemption_overhead"] = round(
+        pressure["prompt"]["replay_prefill_chunks"]
+        / max(pressure["prompt"]["decode_ticks"], 1), 3)
 
     ratio = (runs["fp16"]["mean_resident_kv_bytes_per_stream"]
              / max(runs["int8"]["mean_resident_kv_bytes_per_stream"], 1e-9))
@@ -106,17 +148,21 @@ def bench(streams=64, slots=16, prompt=64, gen=32, chunk=16, page_size=16,
         "config": {"arch": arch, "reduced": True, "streams": streams,
                    "slots": slots, "prompt_len": prompt, "gen_len": gen,
                    "prefill_chunk": chunk, "page_size": page_size,
-                   "w_bits": 4, "seed": seed,
+                   "w_bits": 4, "seed": seed, "pool_frac": pool_frac,
                    "backend": jax.default_backend()},
         "int8": runs["int8"],
         "fp16": runs["fp16"],
+        "pressure": pressure,
         "kv_bytes_ratio_fp16_over_int8": round(ratio, 3),
         "sustained_tok_s_int8": runs["int8"]["sustained_tok_s"],
     }
     Path(out).write_text(json.dumps(out_doc, indent=1) + "\n")
     print(f"serve-mt bench -> {Path(out).name}: int8 KV "
           f"{ratio:.2f}x lower resident bytes/stream than fp16 "
-          f"({runs['int8']['sustained_tok_s']} tok/s sustained)")
+          f"({runs['int8']['sustained_tok_s']} tok/s sustained); overcommit "
+          f"occupancy x{pressure['occupancy_gain']:.2f} over worst-case at "
+          f"{pool_frac:.0%} pool ({pressure['prompt']['preemptions']} "
+          "preemptions)")
     return out_doc
 
 
@@ -124,16 +170,19 @@ def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--streams", type=int, default=64)
     p.add_argument("--slots", type=int, default=16)
-    p.add_argument("--prompt", type=int, default=64)
-    p.add_argument("--gen", type=int, default=32)
-    p.add_argument("--chunk", type=int, default=16)
+    p.add_argument("--prompt", type=int, default=48)
+    p.add_argument("--gen", type=int, default=48)
+    p.add_argument("--chunk", type=int, default=32)
     p.add_argument("--page-size", type=int, default=16)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--pool-frac", type=float, default=0.35,
+                   help="pressure-section pool size as a fraction of "
+                        "worst-case page demand")
     p.add_argument("--out", default=str(MT_JSON))
     args = p.parse_args(argv)
     return bench(streams=args.streams, slots=args.slots, prompt=args.prompt,
                  gen=args.gen, chunk=args.chunk, page_size=args.page_size,
-                 seed=args.seed, out=args.out)
+                 seed=args.seed, pool_frac=args.pool_frac, out=args.out)
 
 
 if __name__ == "__main__":

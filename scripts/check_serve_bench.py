@@ -11,7 +11,13 @@ Two checks, selected by flags (default: both, skipping absent files):
   --mt PATH      BENCH_serve_mt.json — validate the multi-stream schema
                  and fail if the int8 paged KV cache stops delivering
                  ``--min-kv-ratio`` lower resident bytes/stream than the
-                 fp16 reference, or if any stream failed to complete.
+                 fp16 reference, if any stream failed to complete, or if
+                 any run leaked KV pages. The ``pressure`` section must
+                 show overcommit beating worst-case reservation: mean
+                 slot occupancy strictly higher on the same reduced
+                 pool, at least one preemption actually exercised, and
+                 preemption overhead (replayed prefill chunks per decode
+                 tick) at most ``--max-preempt-overhead``.
 
 Exit 0 = all present checks pass; exit 1 with a readable reason
 otherwise. Run from the repo root:
@@ -32,12 +38,17 @@ ROOT = Path(__file__).resolve().parents[1]
 # a real regression without tripping on runner noise.
 MIN_TIER_RATIO = 0.85
 MIN_KV_RATIO = 1.8
+# replayed prefill chunks per decode tick under overcommit: >10% means
+# the scheduler is thrashing (preempting faster than streams progress)
+MAX_PREEMPT_OVERHEAD = 0.10
 
-MT_TOP_KEYS = ("config", "int8", "fp16", "kv_bytes_ratio_fp16_over_int8",
-               "sustained_tok_s_int8")
+MT_TOP_KEYS = ("config", "int8", "fp16", "pressure",
+               "kv_bytes_ratio_fp16_over_int8", "sustained_tok_s_int8")
 MT_RUN_KEYS = ("sustained_tok_s", "tokens_generated", "mean_slot_occupancy",
                "mean_resident_kv_bytes_per_stream", "bytes_per_page",
-               "streams_completed")
+               "streams_completed", "leaked_pages", "preemptions")
+MT_PRESSURE_KEYS = ("pool_frac", "num_pages", "none", "prompt",
+                    "occupancy_gain", "preemption_overhead")
 
 
 def fail(msg: str) -> None:
@@ -63,20 +74,54 @@ def check_serve(path: Path, min_ratio: float) -> None:
           f"(tier/legacy {ratio:.3f} >= {min_ratio})")
 
 
-def check_mt(path: Path, min_kv_ratio: float) -> None:
+def check_mt(path: Path, min_kv_ratio: float,
+             max_preempt_overhead: float = MAX_PREEMPT_OVERHEAD) -> None:
     doc = json.loads(path.read_text())
     missing = [k for k in MT_TOP_KEYS if k not in doc]
     if missing:
         fail(f"{path.name} missing keys {missing} — re-run "
              "benchmarks/table7_serve_mt.py")
-    for mode in ("int8", "fp16"):
-        run_missing = [k for k in MT_RUN_KEYS if k not in doc[mode]]
+    press = doc["pressure"]
+    press_missing = [k for k in MT_PRESSURE_KEYS if k not in press]
+    if press_missing:
+        fail(f"{path.name}[pressure] missing keys {press_missing} — re-run "
+             "benchmarks/table7_serve_mt.py")
+    runs = [("int8", doc["int8"]), ("fp16", doc["fp16"]),
+            ("pressure.none", press["none"]),
+            ("pressure.prompt", press["prompt"])]
+    for mode, run in runs:
+        run_missing = [k for k in MT_RUN_KEYS if k not in run]
         if run_missing:
             fail(f"{path.name}[{mode}] missing keys {run_missing}")
         want = doc["config"]["streams"]
-        got = doc[mode]["streams_completed"]
+        got = run["streams_completed"]
         if got != want:
             fail(f"{path.name}[{mode}]: only {got}/{want} streams completed")
+        if run["leaked_pages"] != 0:
+            fail(f"{path.name}[{mode}]: {run['leaked_pages']} KV pages "
+                 "leaked — every terminal state must hand pages back "
+                 "(serve_engine._release)")
+
+    # overcommit must actually buy something on the reduced pool, and
+    # must have been exercised (zero preemptions means the pool was not
+    # actually under pressure — the section proves nothing)
+    occ_oc = press["prompt"]["mean_slot_occupancy"]
+    occ_wc = press["none"]["mean_slot_occupancy"]
+    if not occ_oc > occ_wc:
+        fail(f"{path.name}[pressure]: overcommit occupancy {occ_oc:.3f} "
+             f"does not beat worst-case reservation {occ_wc:.3f} on the "
+             f"same {press['num_pages']}-page pool — optimistic admission "
+             "has stopped paying for its complexity")
+    if press["prompt"]["preemptions"] < 1:
+        fail(f"{path.name}[pressure]: overcommit run recorded no "
+             "preemptions — shrink --pool-frac so the preemption path is "
+             "actually exercised")
+    if press["preemption_overhead"] > max_preempt_overhead:
+        fail(f"{path.name}[pressure]: preemption overhead "
+             f"{press['preemption_overhead']:.3f} replayed chunks/decode "
+             f"tick exceeds {max_preempt_overhead} — the scheduler is "
+             "thrashing (victim selection or admission headroom regressed)")
+
     ratio = doc["kv_bytes_ratio_fp16_over_int8"]
     if ratio < min_kv_ratio:
         fail(
@@ -87,7 +132,10 @@ def check_mt(path: Path, min_kv_ratio: float) -> None:
         )
     print(f"check_serve_bench: {path.name} ok "
           f"(fp16/int8 KV bytes {ratio:.2f}x >= {min_kv_ratio}, "
-          f"{doc['config']['streams']} streams completed)")
+          f"{doc['config']['streams']} streams completed; overcommit "
+          f"occupancy {occ_oc:.2f} > {occ_wc:.2f} worst-case, "
+          f"{press['prompt']['preemptions']} preemptions at "
+          f"{press['preemption_overhead']:.3f} overhead, zero leaks)")
 
 
 def main(argv=None) -> None:
@@ -96,6 +144,8 @@ def main(argv=None) -> None:
     p.add_argument("--mt", default=str(ROOT / "BENCH_serve_mt.json"))
     p.add_argument("--min-tier-ratio", type=float, default=MIN_TIER_RATIO)
     p.add_argument("--min-kv-ratio", type=float, default=MIN_KV_RATIO)
+    p.add_argument("--max-preempt-overhead", type=float,
+                   default=MAX_PREEMPT_OVERHEAD)
     p.add_argument("--require", choices=["serve", "mt", "both", "any"],
                    default="any",
                    help="which files must exist (default: check whatever "
@@ -110,7 +160,7 @@ def main(argv=None) -> None:
     elif args.require in ("serve", "both"):
         fail(f"{serve} not found")
     if mt.exists():
-        check_mt(mt, args.min_kv_ratio)
+        check_mt(mt, args.min_kv_ratio, args.max_preempt_overhead)
         checked += 1
     elif args.require in ("mt", "both"):
         fail(f"{mt} not found")

@@ -92,6 +92,29 @@ def parse_args(argv=None):
                         "kv_page_size, else 16)")
     p.add_argument("--prefill-chunk", type=int, default=32,
                    help="engine prefill chunk length (tokens per tick)")
+    p.add_argument("--num-pages", type=int, default=None,
+                   help="engine KV pool size in pages incl. the sink "
+                        "(default: worst-case sizing — every slot can hold "
+                        "a full-length stream); set it below that to create "
+                        "page pressure")
+    p.add_argument("--overcommit", default="none",
+                   choices=["none", "prompt"],
+                   help="engine admission policy: 'none' reserves the "
+                        "worst-case page need up front (reference); "
+                        "'prompt' reserves only the prompt's pages plus a "
+                        "small headroom and preempts the newest / lowest-"
+                        "priority stream on pool exhaustion (bit-exact "
+                        "re-prefill resume)")
+    p.add_argument("--deadline-ticks", type=int, default=None,
+                   help="per-request relative deadline for --engine: a "
+                        "stream not finished within this many ticks of "
+                        "submission moves to the terminal 'expired' state "
+                        "and its pages are reclaimed")
+    p.add_argument("--drain-on-sigterm", action="store_true",
+                   help="install GracefulShutdown for the --engine loop: "
+                        "SIGTERM/SIGINT stops admission, finishes in-flight "
+                        "streams and reports per-request statuses instead "
+                        "of killing them dead")
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args(argv)
 
@@ -304,15 +327,18 @@ def _serve_engine(args, cfg, model, params, artifact, fp_bytes):
     manifest = artifact.manifest if artifact is not None else {}
     kv_dtype = args.kv_dtype or manifest.get("kv_dtype") or "int8"
     page_size = args.page_size or int(manifest.get("kv_page_size") or 16)
+    from ..launch.watchdog import GracefulShutdown
+
     num_slots = args.batch
     streams = args.streams or 2 * num_slots
     max_len = args.prompt_len + args.gen_len
     pages_per = -(-max_len // page_size)
+    num_pages = args.num_pages or 1 + num_slots * pages_per
     ecfg = EngineConfig(
         num_slots=num_slots, page_size=page_size,
-        num_pages=1 + num_slots * pages_per, max_len=max_len,
+        num_pages=num_pages, max_len=max_len,
         prefill_chunk=min(args.prefill_chunk, max(args.prompt_len, 1)),
-        kv_dtype=kv_dtype)
+        kv_dtype=kv_dtype, overcommit=args.overcommit)
     hook = artifact.hook() if artifact is not None else None
     weights = artifact.params if artifact is not None else params
     from ..models.common import NO_QUANT
@@ -327,20 +353,41 @@ def _serve_engine(args, cfg, model, params, artifact, fp_bytes):
     gens = rng.integers(max(args.gen_len // 2, 1), args.gen_len + 1, streams)
     prompts = [corpus.sample(1, int(plens[i]), seed=args.seed + i)[0]
                for i in range(streams)]
+    gs = GracefulShutdown() if args.drain_on_sigterm else None
     nxt = 0
-    while nxt < streams or eng.pending():
-        while nxt < streams and arrivals[nxt] <= eng.tick:
-            eng.submit(prompts[nxt], int(gens[nxt]))
-            nxt += 1
-        eng.step()
+    try:
+        while nxt < streams or eng.pending():
+            if gs is not None and gs.requested:
+                statuses = eng.drain(finish=True)
+                counts: dict = {}
+                for st in statuses.values():
+                    counts[st] = counts.get(st, 0) + 1
+                print(f"[drain] signal received: admission stopped, "
+                      f"in-flight work settled; request statuses {counts} "
+                      f"({streams - nxt} never submitted)")
+                break
+            while nxt < streams and arrivals[nxt] <= eng.tick:
+                eng.submit(prompts[nxt], int(gens[nxt]),
+                           deadline_ticks=args.deadline_ticks)
+                nxt += 1
+            eng.step()
+    finally:
+        if gs is not None:
+            gs.restore()
     eng.assert_no_leaks()
     m = eng.metrics()
+    pressure = (f"; preempt {m['preemptions']} expired {m['expired']} "
+                f"failed {m['failed']} stragglers {m['stragglers']}"
+                if (m["preemptions"] or m["expired"] or m["failed"]
+                    or m["stragglers"]) else "")
     print(f"[engine {kv_dtype}] compile {t_compile:.2f}s; {streams} streams "
-          f"over {num_slots} slots: {m['tokens_generated']} tokens in "
+          f"over {num_slots} slots ({num_pages} pages, overcommit="
+          f"{args.overcommit}): {m['tokens_generated']} tokens in "
           f"{m['wall_s']:.2f}s ({m['sustained_tok_s']:.1f} tok/s sustained); "
           f"occupancy {m['mean_slot_occupancy']:.2f}; resident KV "
           f"{m['mean_resident_kv_bytes_per_stream']/1e3:.1f}KB/stream "
-          f"(page {page_size} tok, {m['bytes_per_page']/1e3:.1f}KB)")
+          f"(page {page_size} tok, {m['bytes_per_page']/1e3:.1f}KB)"
+          f"{pressure}")
     return m
 
 

@@ -29,10 +29,10 @@ class StepWatchdog:
         self._t0: Optional[float] = None
 
     def start(self):
-        self._t0 = time.time()
+        self._t0 = time.perf_counter()
 
     def stop(self, step: int) -> float:
-        dt = time.time() - self._t0
+        dt = time.perf_counter() - self._t0
         self.n += 1
         if self.mean is None:
             self.mean = dt

@@ -4,9 +4,16 @@ Slot-based continuous batching with a paged KV cache: new prompts are
 admitted into freed decode slots, prefill runs in chunks interleaved
 with decode ticks, and KV lives in per-layer page pools (int8 codes +
 scales through ``kernels/kvattn``, or float reference mode) indexed by
-one block table per stream. See ``docs/serving.md``.
+one block table per stream. Admission overcommit + preemption,
+per-request deadlines, per-stream fault isolation and graceful drain
+make the engine survive pressure instead of refusing it. See
+``docs/serving.md``.
 """
-from .engine import EngineConfig, Request, RequestState, ServeEngine
-from .pages import PagePool
+from .engine import (ACTIVE_STATES, TERMINAL_STATES, EngineConfig,
+                     EngineStalledError, Request, RequestRejected,
+                     RequestState, ServeEngine)
+from .pages import PagePool, PagePoolExhausted
 
-__all__ = ["EngineConfig", "PagePool", "Request", "RequestState", "ServeEngine"]
+__all__ = ["ACTIVE_STATES", "TERMINAL_STATES", "EngineConfig",
+           "EngineStalledError", "PagePool", "PagePoolExhausted", "Request",
+           "RequestRejected", "RequestState", "ServeEngine"]

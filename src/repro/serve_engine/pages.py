@@ -15,15 +15,27 @@ and its contents are never read.
 from __future__ import annotations
 
 
+class PagePoolExhausted(RuntimeError):
+    """The pool cannot satisfy a reservation or allocation.
+
+    Typed so the scheduler can catch exactly this condition (and
+    preempt a victim stream under overcommit) without masking real
+    bookkeeping bugs behind a bare ``RuntimeError``.
+    """
+
+
 class PagePool:
     """Free-list allocator over ``num_pages`` KV pages.
 
     Pages are owned by request uids; :meth:`free_owner` releases
     everything a request holds, so cancel/finish paths cannot
-    half-release. ``reserve``/``release_reservation`` implement
-    admission control: a request is only admitted when its worst-case
-    page need (prompt + max_new tokens) is covered, so decode can never
-    hit pool exhaustion mid-stream.
+    half-release. ``reserve`` implements admission control: under
+    ``overcommit='none'`` a request is only admitted when its
+    worst-case page need (prompt + max_new tokens) is covered, so
+    decode can never hit pool exhaustion mid-stream. Under overcommit
+    the engine reserves less up front and grows the reservation
+    just-in-time via :meth:`add_reservation`; a ``False`` return there
+    is the signal that triggers preemption.
     """
 
     def __init__(self, num_pages: int):
@@ -61,17 +73,39 @@ class PagePool:
         if owner in self._reserved or owner in self._owner_pages:
             raise ValueError(f"owner {owner!r} already admitted")
         if not self.can_reserve(n):
-            raise RuntimeError(
+            raise PagePoolExhausted(
                 f"page pool exhausted: want {n}, available {self.available()}")
         self._reserved[owner] = n
         self._owner_pages[owner] = []
+
+    def add_reservation(self, owner, n: int = 1) -> bool:
+        """Grow an admitted owner's reservation by ``n`` pages.
+
+        Returns False (without changing anything) when the pool has no
+        unpromised pages left — the caller decides what gives way.
+        """
+        if owner not in self._owner_pages:
+            raise ValueError(f"owner {owner!r} not admitted")
+        if self.available() < n:
+            return False
+        self._reserved[owner] = self._reserved.get(owner, 0) + n
+        return True
+
+    def reserved_for(self, owner) -> int:
+        """Unspent reservation (pages promised but not yet allocated)."""
+        return self._reserved.get(owner, 0)
 
     # -- allocation --------------------------------------------------------
 
     def alloc(self, owner) -> int:
         """Take one page against ``owner``'s reservation."""
         if self._reserved.get(owner, 0) <= 0:
-            raise RuntimeError(f"owner {owner!r} has no reservation left")
+            raise PagePoolExhausted(
+                f"owner {owner!r} has no reservation left")
+        if not self._free:
+            raise PagePoolExhausted(
+                "free list empty with reservations outstanding — "
+                "reservation accounting is corrupt")
         page = self._free.pop()
         self._reserved[owner] -= 1
         self._owner_pages[owner].append(page)

@@ -17,10 +17,20 @@ Three families of faults, used by ``test_faults.py`` and by the CI
     truncate ``arrays.npz`` (:func:`truncate_arrays`), or edit the
     manifest (:func:`edit_manifest`).
 
+  * **engine faults** — chaos for the serve engine: cancel a stream
+    mid-decode (:func:`cancel_mid_decode`), poison one slot's decode
+    logits with NaN (:func:`nan_decode_slot`), or storm a pool too
+    small for worst-case reservation (:func:`pool_pressure_storm`).
+
 CLI (used by CI):
 
   PYTHONPATH=src python tests/faults.py kill-resume
   PYTHONPATH=src python tests/faults.py corruption
+  PYTHONPATH=src python tests/faults.py serve-cancel
+  PYTHONPATH=src python tests/faults.py serve-corrupt
+  PYTHONPATH=src python tests/faults.py pool-pressure
+  PYTHONPATH=src python tests/faults.py nan-decode-slot
+  PYTHONPATH=src python tests/faults.py sigterm-drain
 """
 from __future__ import annotations
 
@@ -223,6 +233,46 @@ def edit_manifest(directory, fn) -> None:
 # ---------------------------------------------------------------------------
 
 
+@contextlib.contextmanager
+def nan_decode_slot(engine, uid: int, *, after_tokens: int = 2):
+    """Corrupt ONE decode step's logits for request ``uid``'s slot row
+    (once it has ``after_tokens`` tokens) with NaN — the device-fault
+    shape a bad kernel or poisoned weights would produce for a single
+    stream. The engine must fail only that request; every other slot in
+    the same batched step continues."""
+    import jax.numpy as jnp
+
+    engine.compile()
+    orig = engine._decode_c
+    state = {"fired": False}
+
+    def patched(params, tokens, cache, pos, bt):
+        logits, cache = orig(params, tokens, cache, pos, bt)
+        req = engine.requests.get(uid)
+        if (not state["fired"] and req is not None and req.state == "decode"
+                and req.slot >= 0 and len(req.generated) >= after_tokens):
+            logits = logits.at[req.slot].set(jnp.nan)
+            state["fired"] = True
+        return logits, cache
+
+    engine._decode_c = patched
+    try:
+        yield state
+    finally:
+        engine._decode_c = orig
+
+
+def pool_pressure_storm(engine, prompts, max_news, *, max_ticks: int = 10_000):
+    """Submit every stream at tick 0 against an engine whose pool is too
+    small for worst-case reservation, then drive to completion. Under
+    ``overcommit='prompt'`` this manufactures a preemption storm; the
+    caller asserts >= 1 preemption, bit-exact tokens and a clean pool."""
+    for uid, (p, mn) in enumerate(zip(prompts, max_news)):
+        engine.submit(p, mn, uid=uid)
+    engine.run(max_ticks=max_ticks)
+    return engine
+
+
 def cancel_mid_decode(engine, uid: int, *, after_tokens: int = 2,
                       max_ticks: int = 10_000):
     """Drive ``engine`` until drained, cancelling request ``uid`` the
@@ -332,7 +382,7 @@ def _cli_corruption() -> None:
             raise AssertionError("bit flip went undetected")
 
 
-def _serve_setup():
+def _serve_setup(**cfg_overrides):
     import jax
     import numpy as np
 
@@ -341,14 +391,21 @@ def _serve_setup():
 
     _, model = get_model("brecq_lm_100m", reduced=True)
     params = model.init(jax.random.PRNGKey(0))
-    ecfg = EngineConfig(num_slots=3, page_size=4, num_pages=49, max_len=32,
-                        prefill_chunk=8, kv_dtype="float32", backend="xla")
+    base = dict(num_slots=3, page_size=4, num_pages=49, max_len=32,
+                prefill_chunk=8, kv_dtype="float32", backend="xla")
+    base.update(cfg_overrides)
+    ecfg = EngineConfig(**base)
     rng = np.random.default_rng(21)
     prompts = [rng.integers(0, model.cfg.vocab, size=n).astype(np.int32)
                for n in (6, 9, 7)]
 
+    donor: list = []  # first engine compiles; later ones share its programs
+
     def make():
-        eng = ServeEngine(model, params, ecfg)
+        eng = ServeEngine(model, params, ecfg,
+                          share_compiled=donor[0] if donor else None)
+        if not donor:
+            donor.append(eng)
         for uid, p in enumerate(prompts):
             eng.submit(p, (8, 12, 8)[uid], uid=uid)
         return eng
@@ -401,21 +458,129 @@ def _cli_serve_corrupt() -> None:
             raise AssertionError("corrupt artifact started serving")
 
 
+def _cli_pool_pressure() -> None:
+    """Preemption storm: a pool far below worst-case demand under
+    overcommit='prompt' must preempt, finish every stream bit-identical
+    to its solo run, and leave the pool pristine."""
+    import jax
+    import numpy as np
+
+    from repro.models import get_model
+    from repro.serve_engine import EngineConfig, ServeEngine
+
+    _, model = get_model("brecq_lm_100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    base = dict(num_slots=3, page_size=4, max_len=32, prefill_chunk=8,
+                kv_dtype="float32", backend="xla")
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, model.cfg.vocab, size=n).astype(np.int32)
+               for n in (6, 9, 7, 11)]
+    max_news = (12, 14, 12, 10)
+
+    solo_cfg = EngineConfig(num_pages=49, **base)
+    donor = ServeEngine(model, params, solo_cfg)
+    donor.compile()
+    refs = {}
+    for uid, p in enumerate(prompts):
+        e = ServeEngine(model, params, solo_cfg, share_compiled=donor)
+        e.submit(p, max_news[uid], uid=uid)
+        e.run()
+        refs[uid] = list(e.requests[uid].generated)
+
+    # 7 usable pages vs 16 worst-case demand: guaranteed mid-decode
+    # exhaustion once several streams grow together
+    eng = ServeEngine(model, params,
+                      EngineConfig(num_pages=8, overcommit="prompt", **base))
+    pool_pressure_storm(eng, prompts, max_news)
+    m = eng.metrics()
+    assert m["preemptions"] >= 1, "pressure storm produced no preemption"
+    for uid, ref in refs.items():
+        assert eng.requests[uid].state == "done", (uid, eng.requests[uid].state)
+        assert list(eng.requests[uid].generated) == ref, uid
+    eng.assert_no_leaks()
+    print(f"pool-pressure: {m['preemptions']} preemptions "
+          f"({m['replay_prefill_chunks']} replayed chunks over "
+          f"{m['decode_ticks']} decode ticks), all {len(prompts)} streams "
+          "bit-identical to solo runs, zero leaked pages")
+
+
+def _cli_nan_decode_slot() -> None:
+    """NaN logits in one slot's decode row: that request alone fails;
+    the other slots in the same batched step finish unchanged."""
+    make = _serve_setup()
+    ref = make()
+    ref.run()
+    eng = make()
+    with nan_decode_slot(eng, uid=1, after_tokens=3) as fired:
+        eng.run()
+    assert fired["fired"], "injection never triggered"
+    assert eng.requests[1].state == "failed", eng.requests[1].state
+    assert eng.requests[1].error == "non-finite logits"
+    assert eng.pool.refcount(1) == 0, "failed stream leaked pages"
+    for uid in (0, 2):
+        assert eng.requests[uid].state == "done"
+        assert eng.requests[uid].generated == ref.requests[uid].generated, uid
+    assert eng.metrics()["failed"] == 1
+    eng.assert_no_leaks()
+    print("nan-decode-slot: stream 1 failed in isolation, streams 0/2 "
+          f"unchanged ({[len(eng.requests[u].generated) for u in (0, 2)]} "
+          "tokens), pages reclaimed")
+
+
+def _cli_sigterm_drain() -> None:
+    """Real SIGTERM mid-serving: the engine stops admission, finishes
+    in-flight streams, reports statuses, and rejects new submits."""
+    from repro.launch.watchdog import GracefulShutdown
+    from repro.serve_engine import RequestRejected
+
+    make = _serve_setup()
+    eng = make()
+    with GracefulShutdown(install=True) as gs:
+        ticks = 0
+        while eng.pending():
+            eng.step()
+            ticks += 1
+            if ticks == 4:
+                os.kill(os.getpid(), signal.SIGTERM)
+            if gs.requested:
+                statuses = eng.drain(finish=True)
+                break
+        else:
+            raise AssertionError("engine drained before the signal landed")
+    assert eng.draining
+    in_flight = [s for s in statuses.values() if s in ("prefill", "decode")]
+    assert not in_flight, f"drain left in-flight work: {statuses}"
+    eng.assert_no_leaks()
+    try:
+        eng.submit(np.zeros(4, np.int32), 2)
+    except RequestRejected as e:
+        assert e.reason == "draining"
+    else:
+        raise AssertionError("draining engine accepted a new request")
+    print(f"sigterm-drain: admission stopped at tick {eng.tick}, statuses "
+          f"{ {u: s for u, s in sorted(statuses.items())} }, no leaked pages, "
+          "new submits rejected")
+
+
 def main(argv=None) -> None:
     import argparse
 
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("command", choices=["kill-resume", "corruption",
-                                       "serve-cancel", "serve-corrupt"])
+                                       "serve-cancel", "serve-corrupt",
+                                       "pool-pressure", "nan-decode-slot",
+                                       "sigterm-drain"])
     args = p.parse_args(argv)
-    if args.command == "kill-resume":
-        _cli_kill_resume()
-    elif args.command == "corruption":
-        _cli_corruption()
-    elif args.command == "serve-cancel":
-        _cli_serve_cancel()
-    else:
-        _cli_serve_corrupt()
+    dispatch = {
+        "kill-resume": _cli_kill_resume,
+        "corruption": _cli_corruption,
+        "serve-cancel": _cli_serve_cancel,
+        "serve-corrupt": _cli_serve_corrupt,
+        "pool-pressure": _cli_pool_pressure,
+        "nan-decode-slot": _cli_nan_decode_slot,
+        "sigterm-drain": _cli_sigterm_drain,
+    }
+    dispatch[args.command]()
 
 
 if __name__ == "__main__":

@@ -290,6 +290,109 @@ def test_cancel_mid_decode_reclaims_and_isolates():
     assert not eng.cancel(0)
 
 
+def test_nan_decode_slot_fails_in_isolation():
+    """A NaN logit row in one decode slot fails only that request; the
+    other slots in the *same batched step* finish bit-identical to a
+    fault-free run, and the failed stream's pages come back."""
+    make = faults._serve_setup()
+    ref = make()
+    ref.run()
+    eng = make()
+    with faults.nan_decode_slot(eng, uid=1, after_tokens=3) as state:
+        m = eng.run()
+    assert state["fired"], "injection never triggered"
+    assert eng.requests[1].state == "failed"
+    assert eng.requests[1].error == "non-finite logits"
+    assert len(eng.requests[1].generated) == 3  # cut at the poisoned step
+    assert eng.pool.refcount(1) == 0
+    assert m["failed"] == 1
+    for uid in (0, 2):
+        assert eng.requests[uid].state == "done"
+        assert eng.requests[uid].generated == ref.requests[uid].generated
+    eng.assert_no_leaks()
+
+
+def test_nan_prefill_fails_in_isolation():
+    """Same isolation for a fault landing on the *prefill* path (the
+    first-token logits): only the poisoned stream dies."""
+    import jax.numpy as jnp
+
+    make = faults._serve_setup()
+    ref = make()
+    ref.run()
+    eng = make()
+    eng.compile()
+    orig = eng._chunk_c
+    state = {"fired": False}
+
+    def patched(params, tokens, cache, pos, bt):
+        logits, cache = orig(params, tokens, cache, pos, bt)
+        req = eng.requests.get(2)
+        if (not state["fired"] and req is not None
+                and req.state == "prefill" and req.slot >= 0
+                and int(bt[0, 0]) == eng.block_tables[req.slot, 0]):
+            logits = jnp.full_like(logits, jnp.nan)
+            state["fired"] = True
+        return logits, cache
+
+    eng._chunk_c = patched
+    try:
+        eng.run()
+    finally:
+        eng._chunk_c = orig
+    assert state["fired"]
+    assert eng.requests[2].state == "failed"
+    assert eng.requests[2].error == "non-finite logits at prefill"
+    assert eng.requests[2].generated == []
+    for uid in (0, 1):
+        assert eng.requests[uid].state == "done"
+        assert eng.requests[uid].generated == ref.requests[uid].generated
+    eng.assert_no_leaks()
+
+
+def test_shutdown_flag_drains_mid_serving():
+    """The GracefulShutdown flag (SIGTERM handler state, minus the raw
+    signal — that lands in the faults.py CLI) stops admission, settles
+    in-flight streams and rejects new submits."""
+    from repro.launch.watchdog import GracefulShutdown
+    from repro.serve_engine import RequestRejected
+
+    make = faults._serve_setup()
+    eng = make()
+    for _ in range(4):
+        eng.step()
+    gs = GracefulShutdown(install=False)
+    gs.requested = True
+    m = eng.run(shutdown=gs)
+    assert m["drained"] is True
+    assert all(s in ("done", "waiting") for s in m["states"].values())
+    eng.assert_no_leaks()
+    with pytest.raises(RequestRejected, match="draining"):
+        eng.submit(np.zeros(4, np.int32), 2)
+
+
+def test_pool_pressure_storm_smoke():
+    """Pressure-storm helper drives preemption and still finishes every
+    stream (full bit-exactness pin lives in test_serve_pressure.py and
+    the pool-pressure CLI)."""
+    from repro.serve_engine import EngineConfig, ServeEngine
+
+    make = faults._serve_setup()
+    donor = make()  # borrow the module's compiled model/params
+    model, params = donor.model, donor.params
+    eng = ServeEngine(model, params, EngineConfig(
+        num_slots=3, page_size=4, num_pages=8, max_len=32, prefill_chunk=8,
+        kv_dtype="float32", backend="xla", overcommit="prompt"))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, model.cfg.vocab, size=n).astype(np.int32)
+               for n in (6, 9, 7, 11)]
+    faults.pool_pressure_storm(eng, prompts, (12, 14, 12, 10))
+    m = eng.metrics()
+    assert m["preemptions"] >= 1
+    assert all(r.state == "done" for r in eng.requests.values())
+    eng.assert_no_leaks()
+
+
 def test_corrupt_artifact_fails_before_admission(tmp_path):
     """A checksum failure at engine start raises the typed error from
     the verifying load — no engine exists, so no slot was admitted."""

@@ -209,3 +209,115 @@ def test_page_pool_conservation(num_pages, ops, seed):
     for o in list(live):
         pool.free_owner(o)
     pool.check_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# engine interleavings: pressure + lifecycle churn conserve the pool and
+# never perturb surviving streams
+# ---------------------------------------------------------------------------
+
+# tight pool (7 usable pages, worst-case demand far above) so random
+# interleavings also drive the overcommit/preemption machinery
+_ENG_BASE = dict(num_slots=3, page_size=4, max_len=32, prefill_chunk=8,
+                 kv_dtype="float32", backend="xla")
+_ENG_CTX: dict = {}
+
+
+def _eng_ctx():
+    """Module-lazy model + one compiled donor per pool size + solo-run
+    token cache — hypothesis examples then cost ticks, not compiles."""
+    if not _ENG_CTX:
+        import jax
+
+        from repro.models import get_model
+        from repro.serve_engine import EngineConfig, ServeEngine
+
+        _, model = get_model("brecq_lm_100m", reduced=True)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(0, model.cfg.vocab, size=n).astype(np.int32)
+                   for n in (5, 7, 9, 11)]
+        cfgs = {
+            "pressure": EngineConfig(num_pages=8, overcommit="prompt",
+                                     **_ENG_BASE),
+            "solo": EngineConfig(num_pages=49, **_ENG_BASE),
+        }
+        donors = {k: ServeEngine(model, params, c) for k, c in cfgs.items()}
+
+        def make(kind):
+            return ServeEngine(model, params, cfgs[kind],
+                               share_compiled=donors[kind])
+
+        solo_cache: dict = {}
+
+        def solo(pi, mn):
+            if (pi, mn) not in solo_cache:
+                e = make("solo")
+                e.submit(prompts[pi], mn, uid=0)
+                e.run()
+                solo_cache[(pi, mn)] = list(e.requests[0].generated)
+            return solo_cache[(pi, mn)]
+
+        _ENG_CTX.update(make=make, solo=solo, prompts=prompts)
+    return _ENG_CTX
+
+
+@st.composite
+def engine_schedule(draw):
+    """2–4 streams with optional per-stream deadline / cancel tick and
+    an optional mid-run drain. Lengths keep worst-case per-stream need
+    within the pool so submit() admits everything."""
+    n = draw(st.integers(2, 4))
+    streams = []
+    for _ in range(n):
+        pi = draw(st.integers(0, 3))
+        mn = draw(st.sampled_from([4, 8, 12]))
+        deadline = draw(st.sampled_from([None, None, None, 6, 14]))
+        cancel_at = draw(st.sampled_from([None, None, None, 3, 9]))
+        streams.append((pi, mn, deadline, cancel_at))
+    drain_at = draw(st.sampled_from([None, None, None, 12]))
+    return streams, drain_at
+
+
+@settings(max_examples=8, deadline=None)
+@given(engine_schedule())
+def test_engine_interleavings_conserve_pool_and_pin_survivors(schedule):
+    """Any interleaving of submit/cancel/deadline-expiry/drain on a
+    pool under preemption pressure (a) conserves pages at every tick,
+    (b) releases everything by the end, and (c) leaves every stream
+    that ran to 'done' bit-identical to its solo run — churn in
+    neighbouring slots must never leak into a surviving stream's KV."""
+    ctx = _eng_ctx()
+    streams, drain_at = schedule
+    eng = ctx["make"]("pressure")
+    for uid, (pi, mn, deadline, _) in enumerate(streams):
+        eng.submit(ctx["prompts"][pi], mn, uid=uid, deadline_ticks=deadline)
+    n_usable = eng.cfg.num_pages - 1
+    drained = False
+    while eng.pending() and not drained:
+        if drain_at is not None and eng.tick >= drain_at:
+            eng.drain(finish=True)
+            drained = True
+        else:
+            eng.step()
+        for uid, (_pi, _mn, _dl, cancel_at) in enumerate(streams):
+            if cancel_at is not None and eng.tick == cancel_at:
+                eng.cancel(uid)  # False (no-op) once terminal — fine
+        # page conservation + reservation sanity, every tick
+        assert eng.pool.free_pages + eng.pool.pages_in_use == n_usable
+        assert eng.pool.reserved_pages <= eng.pool.free_pages
+        assert eng.tick < 2000, "engine failed to make progress"
+    eng.assert_no_leaks()
+    final = {u: r.state for u, r in eng.requests.items()}
+    allowed = {"done", "cancelled", "expired"} | ({"waiting"} if drained
+                                                  else set())
+    assert set(final.values()) <= allowed, final
+    for uid, (pi, mn, _dl, _ca) in enumerate(streams):
+        req = eng.requests[uid]
+        if req.state == "done":
+            assert list(req.generated) == ctx["solo"](pi, mn), uid
+        else:
+            # partial output of an interrupted stream is still a prefix
+            # of its solo run (determinism holds right up to the cut)
+            solo_toks = ctx["solo"](pi, mn)
+            assert list(req.generated) == solo_toks[:len(req.generated)], uid

@@ -1,0 +1,296 @@
+"""Serve-engine survival under pressure: overcommit + preemption,
+deadlines, stall reporting, graceful drain.
+
+The load-bearing claim is admission/eviction *correctness*, not speed:
+a pool far below worst-case demand must still finish every stream with
+tokens bit-identical to an unpressured solo run (greedy decode is
+deterministic and re-prefill replays the exact KV), and every exit path
+— done, cancelled, expired, failed, preempted, drained — must hand all
+pages back. Companion chaos CLIs live in ``faults.py``.
+"""
+import numpy as np
+import pytest
+
+from repro.launch.watchdog import GracefulShutdown
+from repro.models import get_model
+from repro.serve_engine import (EngineConfig, EngineStalledError,
+                                RequestRejected, ServeEngine)
+
+BASE = dict(num_slots=3, page_size=4, max_len=32, prefill_chunk=8,
+            kv_dtype="float32", backend="xla")
+
+
+@pytest.fixture(scope="module")
+def mk():
+    """Engine factory with per-config donor caching: the first engine of
+    each EngineConfig compiles, later ones reuse its programs."""
+    import jax
+
+    _, model = get_model("brecq_lm_100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    donors: dict = {}
+
+    def make(**over):
+        cfg = EngineConfig(**{**BASE, **over})
+        key = cfg.program_shape
+        eng = ServeEngine(model, params, cfg,
+                          share_compiled=donors.get(key))
+        donors.setdefault(key, eng)
+        return eng
+
+    return make
+
+
+RNG = np.random.default_rng(3)
+PROMPTS = [RNG.integers(0, 331, size=n).astype(np.int32)
+           for n in (6, 9, 7, 11)]
+MAX_NEWS = (12, 14, 12, 10)
+
+
+def _submit_storm(eng):
+    for uid, (p, mn) in enumerate(zip(PROMPTS, MAX_NEWS)):
+        eng.submit(p, mn, uid=uid)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def solo_refs(mk):
+    """Each stream run alone on an uncontended pool — ground truth."""
+    refs = {}
+    for uid, (p, mn) in enumerate(zip(PROMPTS, MAX_NEWS)):
+        e = mk(num_pages=49)
+        e.submit(p, mn, uid=uid)
+        e.run()
+        refs[uid] = list(e.requests[uid].generated)
+    return refs
+
+
+# ---------------------------------------------------------------------------
+# tentpole: overcommit + preemption correctness
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_resumes_bit_exact(mk, solo_refs):
+    """7 usable pages vs 16 worst-case demand: the scheduler must
+    preempt at least once, yet every stream finishes with tokens
+    identical to its solo run and the pool comes back pristine."""
+    eng = _submit_storm(mk(num_pages=8, overcommit="prompt"))
+    m = eng.run()
+    assert m["preemptions"] >= 1, "pressure never forced a preemption"
+    assert m["replay_prefill_chunks"] >= 1
+    preempted = {u for t, ev, u in eng.events if ev == "preempt"}
+    readmitted = {u for t, ev, u in eng.events if ev == "readmit"}
+    assert preempted and preempted == readmitted
+    for uid, ref in solo_refs.items():
+        req = eng.requests[uid]
+        assert req.state == "done", (uid, req.state)
+        assert list(req.generated) == ref, uid
+        assert req.preemptions == sum(
+            1 for _, ev, u in eng.events if ev == "preempt" and u == uid)
+    eng.assert_no_leaks()
+
+
+def test_overcommit_raises_occupancy_over_worst_case(mk, solo_refs):
+    """Same tight pool, same streams: worst-case reservation serializes
+    admission while 'prompt' packs slots — higher mean occupancy — and
+    both policies produce identical tokens."""
+    worst = _submit_storm(mk(num_pages=8, overcommit="none")).run()
+    oc_eng = _submit_storm(mk(num_pages=8, overcommit="prompt"))
+    oc = oc_eng.run()
+    assert oc["mean_slot_occupancy"] > worst["mean_slot_occupancy"]
+    for uid, ref in solo_refs.items():
+        assert list(oc_eng.requests[uid].generated) == ref, uid
+
+
+def test_victim_is_lowest_priority_then_newest(mk):
+    """Victim selection: priority dominates, admission recency breaks
+    ties, and the requester itself is never evicted."""
+    eng = mk(num_pages=49, overcommit="prompt")
+    eng.submit(PROMPTS[0], 4, uid=0, priority=1)
+    eng.submit(PROMPTS[1], 4, uid=1, priority=0)
+    eng.submit(PROMPTS[2], 4, uid=2, priority=1)
+    eng.step()  # admits all three (pool is comfortable)
+    assert all(r is not None for r in eng.slot_req)
+    assert eng._preempt_for(eng.requests[0])
+    assert eng.requests[1].state == "waiting"  # only priority-0 stream
+    assert eng.requests[1].preemptions == 1
+    # among the remaining equal-priority pair, the newest admission goes
+    assert eng._preempt_for(eng.requests[0])
+    assert eng.requests[2].state == "waiting"
+    # requester is never a candidate: no victims left
+    assert not eng._preempt_for(eng.requests[0])
+    eng.run()
+    assert all(eng.requests[u].state == "done" for u in (0, 1, 2))
+    eng.assert_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expires_and_reclaims(mk):
+    """A request that cannot finish inside its deadline moves to the
+    terminal 'expired' state with pages reclaimed; an undeadlined
+    neighbour is untouched."""
+    eng = mk(num_pages=49)
+    eng.submit(PROMPTS[0], 12, uid=0, deadline_ticks=4)
+    eng.submit(PROMPTS[1], 6, uid=1)
+    m = eng.run()
+    assert eng.requests[0].state == "expired"
+    assert len(eng.requests[0].generated) < 12
+    assert eng.requests[1].state == "done"
+    assert m["expired"] == 1
+    assert eng.pool.refcount(0) == 0
+    assert ("expired", 0) in [(ev, u) for _, ev, u in eng.events]
+    eng.assert_no_leaks()
+    # terminal state: cancel is a no-op, uid is reusable
+    assert not eng.cancel(0)
+    eng.submit(PROMPTS[0], 2, uid=0)
+    eng.run()
+    assert eng.requests[0].state == "done"
+
+
+def test_deadline_expires_while_waiting(mk):
+    """Deadlines bind in the queue too: a stream that never got a slot
+    still expires (it holds no pages, so nothing to reclaim)."""
+    eng = mk(num_pages=8, overcommit="none")
+    # worst-case reserve of stream 0 starves the queue
+    eng.submit(PROMPTS[0], 12, uid=0)
+    eng.submit(PROMPTS[1], 12, uid=1, deadline_ticks=2)
+    eng.run()
+    assert eng.requests[0].state == "done"
+    assert eng.requests[1].state == "expired"
+    assert eng.requests[1].generated == []
+    eng.assert_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# typed rejection + stall reporting
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_uid_rejected_not_overwritten(mk):
+    eng = mk(num_pages=49)
+    eng.submit(PROMPTS[0], 4, uid=7)
+    with pytest.raises(RequestRejected) as ei:
+        eng.submit(PROMPTS[1], 4, uid=7)
+    assert ei.value.reason == "duplicate_uid"
+    assert ei.value.uid == 7
+    assert (eng.tick, "reject:duplicate_uid", 7) in eng.events
+    assert np.array_equal(eng.requests[7].prompt, PROMPTS[0])  # untouched
+    eng.run()
+    eng.submit(PROMPTS[1], 4, uid=7)  # terminal uid is reusable
+    eng.run()
+    assert eng.requests[7].state == "done"
+
+
+def test_reject_reasons_are_typed(mk):
+    eng = mk(num_pages=8)
+    cases = [
+        (dict(prompt=PROMPTS[0], max_new=0), "bad_max_new"),
+        (dict(prompt=np.zeros(30, np.int32), max_new=20), "too_long"),
+        (dict(prompt=np.zeros(20, np.int32), max_new=10), "exceeds_pool"),
+        (dict(prompt=PROMPTS[0], max_new=4, deadline_ticks=0),
+         "bad_deadline"),
+    ]
+    for kw, reason in cases:
+        p = kw.pop("prompt")
+        mn = kw.pop("max_new")
+        with pytest.raises(RequestRejected) as ei:
+            eng.submit(p, mn, **kw)
+        assert ei.value.reason == reason
+    assert not eng.pending()  # nothing was queued
+
+
+def test_stall_raises_typed_error_with_completed_work(mk):
+    eng = mk(num_pages=49)
+    eng.submit(PROMPTS[0], 2, uid=0)
+    eng.submit(PROMPTS[1], 30 - len(PROMPTS[1]) - 1, uid=1)
+    with pytest.raises(EngineStalledError) as ei:
+        eng.run(max_ticks=6)
+    err = ei.value
+    assert err.states[0] == "done"          # finished work is reported…
+    assert err.states[1] in ("prefill", "decode")
+    assert err.metrics["tokens_generated"] >= 2
+    assert "max_ticks=6" in str(err)
+    assert eng.requests[0].generated        # …and not destroyed
+    eng.run()                               # the engine is still usable
+    assert eng.requests[1].state == "done"
+    eng.assert_no_leaks()
+
+
+def test_stall_nonstrict_returns_metrics(mk):
+    eng = mk(num_pages=49)
+    eng.submit(PROMPTS[0], 12, uid=0)
+    m = eng.run(max_ticks=3, strict=False)
+    assert m["stalled"] is True
+    assert m["states"][0] in ("prefill", "decode")
+    eng.run()
+    assert eng.requests[0].state == "done"
+
+
+# ---------------------------------------------------------------------------
+# graceful drain
+# ---------------------------------------------------------------------------
+
+
+def test_drain_finish_settles_all_in_flight(mk):
+    eng = mk(num_pages=49)
+    for uid in range(3):
+        eng.submit(PROMPTS[uid], MAX_NEWS[uid], uid=uid)
+    for _ in range(4):
+        eng.step()
+    statuses = eng.drain(finish=True)
+    assert eng.draining
+    assert all(s == "done" for s in statuses.values()), statuses
+    eng.assert_no_leaks()
+    with pytest.raises(RequestRejected) as ei:
+        eng.submit(PROMPTS[0], 2)
+    assert ei.value.reason == "draining"
+    # idempotent
+    assert eng.drain(finish=True) == statuses
+
+
+def test_drain_preempt_frees_pages_and_keeps_work_resumable(mk):
+    eng = mk(num_pages=49)
+    for uid in range(3):
+        eng.submit(PROMPTS[uid], MAX_NEWS[uid], uid=uid)
+    for _ in range(6):
+        eng.step()
+    statuses = eng.drain(finish=False)
+    assert set(statuses.values()) <= {"waiting", "done"}
+    assert "waiting" in statuses.values()  # something was in flight
+    eng.assert_no_leaks()  # preempted streams hold no pages
+
+
+def test_run_with_shutdown_drains_gracefully(mk):
+    """run(shutdown=...) notices the flag between ticks, drains, and
+    reports — the SIGTERM path minus the raw signal (that is exercised
+    by ``faults.py sigterm-drain``)."""
+    eng = mk(num_pages=49)
+    for uid in range(3):
+        eng.submit(PROMPTS[uid], MAX_NEWS[uid], uid=uid)
+    for _ in range(4):
+        eng.step()
+    gs = GracefulShutdown(install=False)
+    gs.requested = True
+    m = eng.run(shutdown=gs)
+    assert m["drained"] is True
+    assert all(s == "done" for s in m["states"].values())
+    assert m["draining"] is True
+    eng.assert_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# watchdog surfacing
+# ---------------------------------------------------------------------------
+
+
+def test_tick_watchdog_surfaces_in_metrics(mk):
+    eng = mk(num_pages=49)
+    eng.submit(PROMPTS[0], 6, uid=0)
+    m = eng.run()
+    assert m["stragglers"] == eng._watchdog.stragglers
+    assert m["mean_tick_s"] > 0.0
+    assert isinstance(eng.watchdog_notes, list)  # notes, not stdout
